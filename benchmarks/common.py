@@ -1,0 +1,56 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+CPU-sized graphs (the paper's billion-edge runs map onto this substrate
+unchanged — sizes here are chosen so the full suite runs in minutes on one
+core while preserving every asymptotic the figures demonstrate)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import init_gnn_params
+from repro.storage.layout import GraphStore
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
+
+
+def bench_graph(v=20_000, deg=12, d=64, seed=7, self_loops=True):
+    csr = powerlaw_graph(v, deg, seed=seed, self_loops=self_loops)
+    feats = make_features(v, d, seed=seed + 1)
+    return csr, feats
+
+
+def run_atlas(tmpdir, csr, feats, specs, cfg: AtlasConfig):
+    store = GraphStore.create(
+        os.path.join(tmpdir, "store"), csr, feats, num_partitions=cfg.num_partitions
+    )
+    t0 = time.perf_counter()
+    engine = AtlasEngine(cfg)
+    spills, metrics = engine.run(store, specs, os.path.join(tmpdir, "work"))
+    wall = time.perf_counter() - t0
+    out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
+    return out, metrics, wall
+
+
+def gnn_specs(kind: str, d_in: int, hidden=32, out=16, seed=3):
+    return init_gnn_params(kind, [d_in, hidden, out], seed=seed)
+
+
+def save(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+
+
+def fmt_bytes(n) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PiB"

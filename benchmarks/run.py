@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report over dry-run artifacts (when present).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig1 fig6  # subset
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    from benchmarks import accuracy, fig1_sota, fig6_ordering, fig7_eviction, fig8_hotstore
+
+    suites = {
+        "accuracy": accuracy.run,
+        "fig1": fig1_sota.run,
+        "fig6": fig6_ordering.run,
+        "fig7": fig7_eviction.run,
+        "fig8": fig8_hotstore.run,
+    }
+    chosen = [a for a in (argv or list(suites)) if a != "roofline"]
+    t0 = time.time()
+    for name in chosen:
+        print(f"\n=== {name} " + "=" * 50)
+        suites[name]()
+
+    # roofline report, if dry-run artifacts exist
+    if (not argv or "roofline" in argv) and os.path.isdir("results/dryrun"):
+        print("\n=== roofline " + "=" * 50)
+        from benchmarks import roofline
+
+        sys.argv = ["roofline", "--md"]
+        roofline.main()
+    print(f"\n[benchmarks] done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Distributed ATLAS: broadcast GNN inference over a device mesh.
+
+Runs the shard_map push-SpMM (vertex ranges over `data`, feature dim over
+`model`) with source-side combining, and verifies against the in-memory
+oracle.  Re-execs itself with 8 placeholder devices if only one is
+present, so it works out of the box on CPU.
+
+    PYTHONPATH=src python examples/distributed_gnn.py
+"""
+
+import os
+import sys
+
+if os.environ.get("_REPRO_GNN_CHILD") != "1":
+    os.environ["_REPRO_GNN_CHILD"] = "1"
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.distributed.atlas_dist import (  # noqa: E402
+    build_combined_plan,
+    make_combined_layer_step,
+    pad_features,
+)
+from repro.graphs.synth import make_features, powerlaw_graph  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.models.gnn import dense_reference, init_gnn_params  # noqa: E402
+
+
+def main():
+    mesh = make_mesh((4, 2), ("data", "model"))
+    print(f"== mesh {dict(mesh.shape)} over {jax.device_count()} devices")
+    v, d = 4000, 32
+    csr = powerlaw_graph(v, 8, seed=3, self_loops=True)
+    feats = make_features(v, d, seed=4)
+    specs = init_gnn_params("gcn", [d, 24, 16], seed=5)
+
+    plan = build_combined_plan(csr, 4, kind="gcn")
+    print(f"== source-side combining: reuse factor {plan.reuse:.2f} "
+          f"(wire volume /{plan.reuse:.2f})")
+
+    fspec = NamedSharding(mesh, P("data", "model"))
+    espec = NamedSharding(mesh, P("data", None, None))
+    wspec = NamedSharding(mesh, P("model", None))
+    bspec = NamedSharding(mesh, P("model"))
+    x = jax.device_put(jnp.asarray(pad_features(feats, plan)), fspec)
+    src = jax.device_put(jnp.asarray(plan.src_local), espec)
+    wgt = jax.device_put(jnp.asarray(plan.weight), espec)
+    eslot = jax.device_put(jnp.asarray(plan.edge_slot), espec)
+    sdst = jax.device_put(jnp.asarray(plan.slot_dst), espec)
+
+    for spec in specs:
+        step = make_combined_layer_step(mesh, activation=spec.activation)
+        w = jax.device_put(jnp.asarray(spec.params["w"]), wspec)
+        b = jax.device_put(jnp.asarray(spec.params["b"]), bspec)
+        x = step(x, src, wgt, eslot, sdst, w, b)
+
+    out = np.asarray(x)[:v]
+    ref = dense_reference(csr, feats, specs)
+    err = float(np.abs(out - ref).max())
+    print(f"== max error vs oracle: {err:.2e}")
+    assert err < 1e-4
+    print("== OK")
+
+
+if __name__ == "__main__":
+    main()

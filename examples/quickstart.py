@@ -1,0 +1,60 @@
+"""Quickstart: out-of-core full-graph GNN inference with ATLAS.
+
+Builds a synthetic heavy-tailed graph whose features live on disk, runs
+the broadcast-based OOC engine layer by layer under a tight memory
+budget, and checks the result against the in-memory oracle.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.core.reorder import make_order, relabel_features_chunked, relabel_graph
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import dense_reference, init_gnn_params
+from repro.storage.layout import GraphStore
+
+
+def main():
+    v, d = 30_000, 64
+    print(f"== building synthetic graph: {v} vertices, ~{12 * v} edges")
+    csr = powerlaw_graph(v, 12, seed=1)
+    feats = make_features(v, d, seed=2)
+    specs = init_gnn_params("sage", [d, 48, 16], seed=3)
+
+    # one-time ATLAS reordering (paper §3.8)
+    order = make_order("at", csr)
+    csr = relabel_graph(csr, order)
+    feats = relabel_features_chunked(feats, order)
+
+    with tempfile.TemporaryDirectory() as td:
+        store = GraphStore.create(f"{td}/store", csr, feats, num_partitions=8)
+        cfg = AtlasConfig(
+            chunk_bytes=1 << 20,  # scaled-down paper chunk
+            hot_slots=6_000,  # deliberately tight: forces evict/reload
+            eviction="at",  # min-pending-messages policy
+        )
+        engine = AtlasEngine(cfg)
+        spills, metrics = engine.run(store, specs, f"{td}/work")
+        out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
+
+    for m in metrics:
+        print(
+            f"  layer {m.layer}: {m.seconds:.1f}s  read={m.bytes_read >> 20}MiB "
+            f"written={m.bytes_written >> 20}MiB  evictions={m.evictions} "
+            f"reloads={m.reloads} (reload% {m.reload_pct_mean:.1f})"
+        )
+
+    ref = dense_reference(csr, feats, specs)
+    err = np.abs(out - ref).max(axis=1).mean()
+    print(f"== mean-max-abs error vs in-memory reference: {err:.2e} "
+          f"(paper reports 8e-5)")
+    assert err < 1e-4
+    print("== OK")
+
+
+if __name__ == "__main__":
+    main()

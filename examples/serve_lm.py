@@ -1,0 +1,73 @@
+"""Batched LM serving: prefill a batch of prompts, then decode tokens.
+
+Uses the serving step functions (the same ones the multi-pod dry-run
+lowers at scale), on a reduced config so it runs on CPU.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-14b --tokens 16
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models.lm import init_cache, init_params
+from repro.train.step import make_serve_prefill, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_serve_prefill(cfg))
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    b, s = args.batch, args.prompt_len
+    if cfg.input_mode == "tokens":
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                     cfg.vocab_size)
+        batch = {"tokens": prompts}
+    else:  # audio/vlm: precomputed frame/patch embeddings (modality stub)
+        batch = {"embeddings": jax.random.normal(
+            jax.random.PRNGKey(1), (b, s, cfg.d_model), jnp.float32)}
+
+    print(f"== {cfg.name}: prefill batch={b} len={s}")
+    t0 = time.time()
+    logits, prefill_cache = prefill(params, batch)
+    print(f"   prefill {time.time() - t0:.2f}s; last-token logits {logits.shape}")
+
+    # decode continues from a fresh cache sized prompt+tokens; (attention
+    # families could also reuse prefill_cache — see tests for the exact
+    # prefill->decode equivalence check)
+    cache = init_cache(cfg, b, s + args.tokens)
+    generated = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for i in range(args.tokens):
+        if cfg.input_mode == "tokens":
+            sbatch = {"tokens": tok}
+        else:
+            sbatch = {"embeddings": jax.random.normal(
+                jax.random.PRNGKey(100 + i), (b, 1, cfg.d_model), jnp.float32)}
+        logits, cache = step(params, cache, sbatch)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        generated.append(np.asarray(tok[:, 0]))
+    dt = time.time() - t0
+    print(f"   decoded {args.tokens} tokens x {b} seqs in {dt:.2f}s "
+          f"({args.tokens * b / dt:.1f} tok/s)")
+    print("   sample token ids:", np.stack(generated, 1)[0][:12].tolist())
+    print("== OK")
+
+
+if __name__ == "__main__":
+    main()

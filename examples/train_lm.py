@@ -1,0 +1,95 @@
+"""End-to-end driver: train a ~100M-param dense LM on synthetic data.
+
+Demonstrates the full training substrate — config, sharded state, AdamW,
+LR schedule, checkpoint/restore, deterministic data pipeline — on
+whatever devices are available (CPU: 1; pass XLA_FLAGS for more).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LMConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+def model_100m() -> LMConfig:
+    # ~100M params: 12L x d768 (qwen3-family block structure)
+    return LMConfig(
+        name="qwen3-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=16384, qk_norm=True, mlp_kind="swiglu",
+        dtype_name="float32", attn_block_kv=512,
+    )
+
+
+def synthetic_batch(key, batch, seq, vocab):
+    """Deterministic 'language': next token = (3x + 7) % vocab with noise —
+    learnable structure so the loss visibly drops."""
+    k1, k2 = jax.random.split(key)
+    x0 = jax.random.randint(k1, (batch, 1), 0, vocab)
+    steps = jnp.arange(seq)
+
+    def gen(x0):
+        seqs = (x0 * (3 ** steps) + 7 * steps) % vocab
+        return seqs.astype(jnp.int32)
+
+    toks = jax.vmap(gen)(x0[:, 0])
+    noise = jax.random.bernoulli(k2, 0.05, toks.shape)
+    rand = jax.random.randint(k2, toks.shape, 0, vocab)
+    toks = jnp.where(noise, rand, toks)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    state = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
+    print(f"== {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"{jax.device_count()} device(s)")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+    mgr = CheckpointManager(args.ckpt, keep=2)
+    start = mgr.latest_step() or 0
+    if start:
+        abstract = jax.eval_shape(
+            lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0)))
+        state, start = mgr.restore(abstract)
+        print(f"== resumed from step {start}")
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        batch = synthetic_batch(jax.random.PRNGKey(1000 + s), args.batch,
+                                args.seq + 1, cfg.vocab_size)
+        state, metrics = step_fn(state, batch)
+        if (s + 1) % 10 == 0 or s == start:
+            print(f"step {s + 1:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"{(s + 1 - start) * args.batch * args.seq / (time.time() - t0):.0f} tok/s")
+        if (s + 1) % args.ckpt_every == 0:
+            mgr.save(s + 1, state)
+    mgr.wait()
+    print(f"== done: {args.steps} steps in {time.time() - t0:.0f}s; "
+          f"checkpoints in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

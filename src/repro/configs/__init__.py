@@ -1,0 +1,17 @@
+"""Architecture & shape registry.
+
+Each assigned architecture has its own module exporting ``config()``
+(the exact published configuration) and ``smoke_config()`` (a reduced
+same-family config for CPU smoke tests).  ``get_config(name)`` /
+``list_archs()`` are the public entry points used by --arch flags.
+"""
+
+from repro.configs.registry import (  # noqa: F401
+    SHAPES,
+    ShapeSpec,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    list_archs,
+    shape_applicable,
+)

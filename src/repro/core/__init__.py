@@ -1,0 +1,22 @@
+from repro.core.atlas import AtlasConfig, AtlasEngine, LayerMetrics
+from repro.core.eviction import LRUPolicy, MinPendingPolicy, RandomPolicy, make_policy
+from repro.core.orchestrator import COLD, COMPLETED, HOT, NOT_STARTED, Orchestrator
+from repro.core.reorder import atlas_order, make_order, relabel_graph
+
+__all__ = [
+    "AtlasConfig",
+    "AtlasEngine",
+    "LayerMetrics",
+    "MinPendingPolicy",
+    "LRUPolicy",
+    "RandomPolicy",
+    "make_policy",
+    "Orchestrator",
+    "NOT_STARTED",
+    "HOT",
+    "COLD",
+    "COMPLETED",
+    "atlas_order",
+    "make_order",
+    "relabel_graph",
+]

@@ -1,0 +1,355 @@
+"""The ATLAS engine: broadcast-based, layer-wise, out-of-core GNN inference
+(paper §3).
+
+Pipeline per layer (Fig 3):
+
+    reader thread ──chunks──▶ orchestrator/memory-manager (this thread)
+        │ sequential, single-pass                 │ graduated buffers
+        ▼                                         ▼
+    sorted spill files  ◀──writer thread── graduation offload thread
+    of layer l-1                               (dense transform)
+
+Fault tolerance: a layer is a transaction.  The manifest records completed
+layers and their spill files; a crash mid-layer discards that layer's
+partial spills on resume and replays it from the (immutable) previous
+layer.  See ``run(..., resume=True)`` and
+tests/test_atlas_engine.py::test_resume_after_simulated_crash.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+
+import numpy as np
+
+from repro.core.broadcast import chunk_aggregate
+from repro.core.eviction import make_policy
+from repro.core.graduation import GraduationProcessor
+from repro.core.memory_manager import MemoryManager
+from repro.core import orchestrator as ost
+from repro.core.orchestrator import Orchestrator
+from repro.graphs.csr import degrees_from_csr
+from repro.models.gnn import (
+    GNNLayerSpec,
+    edge_weights,
+    layer_update,
+    self_coefficient,
+)
+from repro.storage.coldstore import ColdStore
+from repro.storage.iostats import IOStats
+from repro.storage.layout import GraphStore
+from repro.storage.reader import ChunkReader
+from repro.storage.spill import SpillFile, SpillSet
+from repro.storage.writer import EmbeddingWriter
+
+
+@dataclasses.dataclass
+class AtlasConfig:
+    chunk_bytes: int = 8 * 1024 * 1024  # paper default: 8 MiB chunks
+    hot_slots: int | None = None  # explicit slot count, or
+    hot_bytes: int | None = 256 * 1024 * 1024  # byte budget -> slots
+    eviction: str = "at"  # 'at' | 'lru' | 'rnd'
+    num_partitions: int = 8
+    spill_buffer_rows: int = 8192
+    graduation_rows: int = 8192
+    queue_depth: int = 20
+    backend: str = "numpy"  # 'numpy' | 'jax' chunk aggregation
+    threaded: bool = True  # dedicated reader/writer/offload threads
+    prefetch_depth: int = 4
+    seed: int = 0
+    delete_intermediate: bool = True  # drop layer l-1 spills after layer l
+
+
+@dataclasses.dataclass
+class LayerMetrics:
+    layer: int
+    seconds: float
+    chunks: int
+    bytes_read: int
+    bytes_written: int
+    cold_bytes_read: int
+    cold_bytes_written: int
+    evictions: int
+    reloads: int
+    reload_pct_mean: float  # paper Fig 6/7: % of chunk dsts reloaded
+    peak_hot_occupancy: int
+    peak_cold_resident: int
+    graduated: int
+    mean_span: float
+    p95_span: float
+    max_span: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class AtlasEngine:
+    def __init__(self, config: AtlasConfig | None = None):
+        self.config = config or AtlasConfig()
+
+    # ------------------------------------------------------------ helpers
+    def _hot_slots(self, hot_width: int, dtype=np.float32) -> int:
+        cfg = self.config
+        if cfg.hot_slots is not None:
+            return cfg.hot_slots
+        row_bytes = hot_width * np.dtype(dtype).itemsize
+        return max(16, int(cfg.hot_bytes // row_bytes))
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        store: GraphStore,
+        specs: list[GNNLayerSpec],
+        workdir: str,
+        resume: bool = False,
+    ) -> tuple[SpillSet, list[LayerMetrics]]:
+        os.makedirs(workdir, exist_ok=True)
+        manifest_path = os.path.join(workdir, "run_manifest.json")
+        manifest = {"completed_layers": 0, "spills": {}}
+        if resume and os.path.exists(manifest_path):
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+
+        csr = store.topology()
+        in_deg, _ = degrees_from_csr(csr)
+        metrics: list[LayerMetrics] = []
+        spills = store.layer0_spills()
+        done = manifest["completed_layers"]
+        if done:
+            spills = SpillSet()
+            for p in manifest["spills"][str(done)]:
+                spills.add(SpillFile.open(p))
+
+        for l in range(done, len(specs)):
+            spec = specs[l]
+            # discard partial output of a crashed attempt at this layer
+            out_dir = os.path.join(workdir, f"layer_{l + 1}")
+            if os.path.exists(out_dir):
+                shutil.rmtree(out_dir)
+            layer_spills, m = self.run_layer(
+                csr, in_deg, spills, spec, out_dir, layer_index=l
+            )
+            metrics.append(m)
+            if self.config.delete_intermediate and l > 0:
+                spills.delete_all()
+            spills = layer_spills
+            manifest["completed_layers"] = l + 1
+            manifest["spills"][str(l + 1)] = [f.path for f in spills.files]
+            tmp = manifest_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(manifest, f)
+            os.replace(tmp, manifest_path)
+        return spills, metrics
+
+    # --------------------------------------------------------------- layer
+    def run_layer(
+        self,
+        csr,
+        in_deg: np.ndarray,
+        spills: SpillSet,
+        spec: GNNLayerSpec,
+        out_dir: str,
+        layer_index: int = 0,
+    ) -> tuple[SpillSet, LayerMetrics]:
+        cfg = self.config
+        t0 = time.perf_counter()
+        num_vertices = csr.num_vertices
+
+        required = in_deg.astype(np.int64).copy()
+        if spec.extra_self_message:
+            required += 1
+        if np.any(required == 0):
+            raise ValueError(
+                "vertices with zero required messages would never complete; "
+                "GCN needs self-loops in the topology (graphs.csr.add_self_loops)"
+            )
+
+        read_stats, write_stats, cold_stats = IOStats(), IOStats(), IOStats()
+        reader = ChunkReader(
+            csr,
+            spills,
+            feat_dim=spec.in_dim,
+            feat_dtype=np.float32,
+            chunk_bytes=cfg.chunk_bytes,
+            stats=read_stats,
+            prefetch_depth=cfg.prefetch_depth,
+            num_vertices=num_vertices,
+        )
+        orch = Orchestrator(required)
+        policy = make_policy(cfg.eviction, seed=cfg.seed)
+        cold = ColdStore(
+            os.path.join(out_dir, "coldstore.bin"),
+            dim=spec.hot_width,
+            dtype=np.float32,
+            initial_slots=max(64, self._hot_slots(spec.hot_width) // 4),
+            stats=cold_stats,
+        )
+        mm = MemoryManager(
+            num_slots=self._hot_slots(spec.hot_width),
+            dim=spec.hot_width,
+            dtype=np.float32,
+            orchestrator=orch,
+            policy=policy,
+            cold=cold,
+        )
+        writer = EmbeddingWriter(
+            out_dir,
+            num_vertices=num_vertices,
+            dim=spec.out_dim,
+            dtype=np.float32,
+            num_partitions=cfg.num_partitions,
+            buffer_rows=cfg.spill_buffer_rows,
+            stats=write_stats,
+            queue_depth=cfg.queue_depth,
+            threaded=cfg.threaded,
+        )
+        grad = GraduationProcessor(
+            transform=lambda rows: layer_update(spec, rows),
+            sink=writer.write,
+            dim=spec.hot_width,
+            dtype=np.float32,
+            buffer_rows=cfg.graduation_rows,
+            queue_depth=cfg.queue_depth,
+            threaded=cfg.threaded,
+        )
+        aggregate = chunk_aggregate(cfg.backend)
+        self_coef = self_coefficient(spec)
+        agg_col = spec.in_dim if spec.kind == "sage" else 0
+
+        reload_fracs: list[float] = []
+        chunks = 0
+        it = reader if cfg.threaded else reader.read_serial()
+        for chunk in it:
+            chunks += 1
+            src_g = chunk.edge_src.astype(np.int64)
+            dst = chunk.edge_dst.astype(np.int64)
+            w = edge_weights(spec.kind, src_g, dst, in_deg)
+            src_local = (src_g - chunk.start_id).astype(np.int64)
+            u_dst, partial, counts = aggregate(chunk.feats, src_local, dst, w)
+
+            # eviction shield: everything receiving messages in this chunk
+            exclude = set(u_dst.tolist())
+            if spec.extra_self_message:
+                exclude.update(range(chunk.start_id, chunk.end_id))
+
+            n_reload = 0
+            if spec.extra_self_message:
+                ids = np.arange(chunk.start_id, chunk.end_id, dtype=np.int64)
+                self_rows = chunk.feats.astype(np.float32) * np.float32(self_coef)
+                n_reload += self._deliver(
+                    mm, orch, grad, ids, self_rows,
+                    np.ones(len(ids), dtype=np.int64),
+                    col_offset=0, exclude=exclude, chunk_index=chunk.index,
+                )
+            if len(u_dst):
+                n_reload += self._deliver(
+                    mm, orch, grad, u_dst, partial, counts,
+                    col_offset=agg_col, exclude=exclude, chunk_index=chunk.index,
+                )
+            denom = len(u_dst) + (chunk.num_vertices if spec.extra_self_message else 0)
+            if denom:
+                reload_fracs.append(n_reload / denom)
+
+        grad.close()
+        layer_spills = writer.close()
+
+        if not orch.is_complete():
+            missing = orch.incomplete_vertices()
+            raise RuntimeError(
+                f"layer {layer_index}: {len(missing)} vertices incomplete "
+                f"(first: {missing[:8]})"
+            )
+        if writer.rows_written != num_vertices:
+            raise RuntimeError(
+                f"layer {layer_index}: wrote {writer.rows_written} rows, "
+                f"expected {num_vertices}"
+            )
+        cold.close()
+
+        span = orch.span_stats()
+        m = LayerMetrics(
+            layer=layer_index,
+            seconds=time.perf_counter() - t0,
+            chunks=chunks,
+            bytes_read=read_stats.bytes_read,
+            bytes_written=write_stats.bytes_written,
+            cold_bytes_read=cold_stats.bytes_read,
+            cold_bytes_written=cold_stats.bytes_written,
+            evictions=mm.eviction_count,
+            reloads=mm.reload_count,
+            reload_pct_mean=float(np.mean(reload_fracs) * 100) if reload_fracs else 0.0,
+            peak_hot_occupancy=mm.peak_occupancy,
+            peak_cold_resident=cold.peak_resident,
+            graduated=grad.graduated,
+            mean_span=span["mean_span"],
+            p95_span=span["p95_span"],
+            max_span=span["max_span"],
+        )
+        return layer_spills, m
+
+    # -------------------------------------------------------------- deliver
+    @staticmethod
+    def _deliver(
+        mm: MemoryManager,
+        orch: Orchestrator,
+        grad: GraduationProcessor,
+        vertices: np.ndarray,
+        partial: np.ndarray,
+        counts: np.ndarray,
+        col_offset: int,
+        exclude: set,
+        chunk_index: int,
+    ) -> int:
+        """Route one batch of pre-aggregated records to the hot store.
+
+        Delivery is split into sub-batches of at most ``mm.num_slots``
+        destinations: within one activation the sub-batch itself is the
+        only hard-unevicatable set, so a sub-batch that fits the hot store
+        can always be placed (earlier sub-batches become eviction fodder —
+        they will reload, which is exactly the paper's churn the min-pending
+        policy then minimises).  Returns the number of COLD->HOT reloads.
+        """
+        reloads = 0
+        cap = max(1, mm.num_slots)
+        for s in range(0, len(vertices), cap):
+            vs = vertices[s : s + cap]
+            ps = partial[s : s + cap]
+            cs = counts[s : s + cap]
+            reloads += int(np.sum(orch.state[vs] == ost.COLD))
+            mm.activate(vs, exclude)
+            old_pending = orch.pending(vs)
+            mm.accumulate(vs, ps, col_offset)
+            done_mask = orch.deliver(vs, cs, chunk_index)
+            new_pending = old_pending - cs
+            live = ~done_mask
+            if np.any(live):
+                mm.update_policy_scores(vs[live], old_pending[live], new_pending[live])
+            if np.any(done_mask):
+                done = vs[done_mask]
+                rows = mm.release(done)
+                grad.add(done, rows)
+        return reloads
+
+
+# --------------------------------------------------------------------------
+# Materialisation helper (tests/benchmarks): spills -> dense [V, d] array
+# --------------------------------------------------------------------------
+
+
+def spills_to_dense(spills: SpillSet, num_vertices: int, dim: int) -> np.ndarray:
+    out = np.full((num_vertices, dim), np.nan, dtype=np.float32)
+    seen = np.zeros(num_vertices, dtype=bool)
+    for f in spills.files:
+        ids, rows = f.read_all()
+        ids = ids.astype(np.int64)
+        if np.any(seen[ids]):
+            raise RuntimeError("duplicate vertex rows across spill files")
+        seen[ids] = True
+        out[ids] = rows.astype(np.float32)
+    if not np.all(seen):
+        raise RuntimeError(f"{int((~seen).sum())} vertices missing from spills")
+    return out

@@ -1,0 +1,178 @@
+"""Eviction policies for the hot store (paper §3.5.2).
+
+ATLAS's policy is *minimum-pending-messages*: evict the vertices with the
+fewest messages still outstanding — they are closest to completion, so the
+next reload is likely their last, minimising evict→reload churn.
+
+Implemented as a bucket min-structure: pending counts are small bounded
+integers ([0, max_in_degree]), so vertices live in score-indexed buckets
+with O(1) insert / remove / decrement and O(k) selection by scanning the
+smallest non-empty buckets (paper uses doubly-linked-list buckets; a
+hashed-set bucket has the identical complexity profile and is simpler to
+keep correct).
+
+LRU and Random are the ablation baselines (Fig 7).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+
+class EvictionPolicy:
+    """Tracks the set of HOT vertices and picks eviction victims."""
+
+    def add(self, vertex: int, pending: int) -> None:
+        raise NotImplementedError
+
+    def remove(self, vertex: int) -> None:
+        raise NotImplementedError
+
+    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
+        """Called when messages arrive for a HOT vertex."""
+        raise NotImplementedError
+
+    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class MinPendingPolicy(EvictionPolicy):
+    """ATLAS bucket min-heap keyed by pending-message count."""
+
+    def __init__(self):
+        self._buckets: dict[int, OrderedDict[int, None]] = {}
+        self._score: dict[int, int] = {}
+        self._min_score = 0
+
+    def add(self, vertex: int, pending: int) -> None:
+        was_empty = not self._score
+        self._buckets.setdefault(pending, OrderedDict())[vertex] = None
+        self._score[vertex] = pending
+        self._min_score = pending if was_empty else min(self._min_score, pending)
+
+    def remove(self, vertex: int) -> None:
+        s = self._score.pop(vertex)
+        b = self._buckets[s]
+        del b[vertex]
+        if not b:
+            del self._buckets[s]
+
+    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
+        # O(1) bucket move; scores only ever decrease as messages arrive.
+        b = self._buckets[old_pending]
+        del b[vertex]
+        if not b:
+            del self._buckets[old_pending]
+        self._buckets.setdefault(new_pending, OrderedDict())[vertex] = None
+        self._score[vertex] = new_pending
+        if new_pending < self._min_score:
+            self._min_score = new_pending
+
+    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
+        """Scan smallest non-empty buckets upward: O(k + #empty-scans)."""
+        victims: list[int] = []
+        if not self._score:
+            return victims
+        exclude = exclude or set()
+        score = self._min_score
+        max_score = max(self._buckets) if self._buckets else 0
+        while len(victims) < k and score <= max_score:
+            bucket = self._buckets.get(score)
+            if bucket:
+                for v in bucket:
+                    if v not in exclude:
+                        victims.append(v)
+                        if len(victims) >= k:
+                            break
+            score += 1
+        # lazily repair the min pointer to the first non-empty bucket
+        while self._min_score <= max_score and self._min_score not in self._buckets:
+            self._min_score += 1
+        return victims
+
+    def __len__(self) -> int:
+        return len(self._score)
+
+
+class LRUPolicy(EvictionPolicy):
+    """Least-recently-updated vertex evicted first (Fig 7 baseline).
+
+    Paper's finding: LRU is the *worst* policy here — high-degree vertices
+    still awaiting many messages are evicted by recency and thrash.
+    """
+
+    def __init__(self):
+        self._order: OrderedDict[int, None] = OrderedDict()
+
+    def add(self, vertex: int, pending: int) -> None:
+        self._order[vertex] = None
+        self._order.move_to_end(vertex)
+
+    def remove(self, vertex: int) -> None:
+        del self._order[vertex]
+
+    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
+        self._order.move_to_end(vertex)  # touched = most recently used
+
+    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
+        exclude = exclude or set()
+        victims = []
+        for v in self._order:  # oldest first
+            if v not in exclude:
+                victims.append(v)
+                if len(victims) >= k:
+                    break
+        return victims
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+
+class RandomPolicy(EvictionPolicy):
+    """Uniform random victims (Fig 7 baseline). Seeded for determinism."""
+
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+        self._vertices: dict[int, int] = {}  # vertex -> index in _list
+        self._list: list[int] = []
+
+    def add(self, vertex: int, pending: int) -> None:
+        self._vertices[vertex] = len(self._list)
+        self._list.append(vertex)
+
+    def remove(self, vertex: int) -> None:
+        idx = self._vertices.pop(vertex)
+        last = self._list.pop()
+        if last != vertex:
+            self._list[idx] = last
+            self._vertices[last] = idx
+
+    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
+        pass
+
+    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
+        exclude = exclude or set()
+        pool = [v for v in self._list if v not in exclude]
+        if len(pool) <= k:
+            return pool
+        idx = self._rng.choice(len(pool), size=k, replace=False)
+        return [pool[i] for i in idx]
+
+    def __len__(self) -> int:
+        return len(self._list)
+
+
+def make_policy(name: str, seed: int = 0) -> EvictionPolicy:
+    name = name.lower()
+    if name in ("at", "min_pending", "minpending", "atlas"):
+        return MinPendingPolicy()
+    if name == "lru":
+        return LRUPolicy()
+    if name in ("rnd", "random"):
+        return RandomPolicy(seed)
+    raise ValueError(f"unknown eviction policy {name!r}")

@@ -1,0 +1,97 @@
+"""Graduation processor (paper §3.6).
+
+Vertices whose pending count reaches zero are "graduated": their finalized
+aggregate rows move into a graduation buffer (freeing hot-store slots
+immediately).  Full buffers are handed to a dedicated offload thread which
+runs the layer's dense transform (the accelerator step: W·x + b + σ) and
+enqueues results to the writer.  Double buffering keeps the main thread
+filling one buffer while the other is in flight.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable
+
+import numpy as np
+
+
+class GraduationProcessor:
+    def __init__(
+        self,
+        transform: Callable[[np.ndarray], np.ndarray],
+        sink: Callable[[np.ndarray, np.ndarray], None],
+        dim: int,
+        dtype,
+        buffer_rows: int = 8192,
+        queue_depth: int = 20,
+        threaded: bool = True,
+    ):
+        self.transform = transform
+        self.sink = sink
+        self.dim = dim
+        self.dtype = np.dtype(dtype)
+        self.buffer_rows = max(1, buffer_rows)
+        self._ids: list[np.ndarray] = []
+        self._rows: list[np.ndarray] = []
+        self._count = 0
+        self.graduated = 0
+        self.offload_batches = 0
+        self._threaded = threaded
+        if threaded:
+            self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
+            self._err: list[BaseException] = []
+            self._thread = threading.Thread(
+                target=self._offload_loop, name="atlas-graduate", daemon=True
+            )
+            self._thread.start()
+
+    # -------------------------------------------------------------- feed
+    def add(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        if len(ids) == 0:
+            return
+        self._ids.append(np.asarray(ids))
+        self._rows.append(np.asarray(rows))
+        self._count += len(ids)
+        self.graduated += len(ids)
+        while self._count >= self.buffer_rows:
+            self._emit(self.buffer_rows)
+
+    def _emit(self, n_rows: int) -> None:
+        ids = np.concatenate(self._ids)
+        rows = np.concatenate(self._rows)
+        take_ids, rest_ids = ids[:n_rows], ids[n_rows:]
+        take_rows, rest_rows = rows[:n_rows], rows[n_rows:]
+        self._ids = [rest_ids] if len(rest_ids) else []
+        self._rows = [rest_rows] if len(rest_rows) else []
+        self._count = len(rest_ids)
+        self.offload_batches += 1
+        if self._threaded:
+            if self._err:
+                raise self._err[0]
+            self._q.put((take_ids, take_rows))
+        else:
+            self.sink(take_ids, self.transform(take_rows))
+
+    def _offload_loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                ids, rows = item
+                self.sink(ids, self.transform(rows))
+            except BaseException as exc:
+                self._err.append(exc)
+                return
+
+    # ------------------------------------------------------------- close
+    def close(self) -> None:
+        if self._count:
+            self._emit(self._count)
+        if self._threaded:
+            self._q.put(None)
+            self._thread.join()
+            if self._err:
+                raise self._err[0]

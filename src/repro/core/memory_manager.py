@@ -1,0 +1,174 @@
+"""Hot-store memory manager (paper §3.5).
+
+Fixed-size slot array holding partial aggregation state for active
+vertices, a vertex→slot map, and the eviction/reload dance against the
+disk-backed cold store.  A vertex's partial state is only updatable while
+HOT; COLD partials live in the cold store until reloaded.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import orchestrator as ost
+from repro.core.eviction import EvictionPolicy
+from repro.core.orchestrator import Orchestrator
+from repro.storage.coldstore import ColdStore
+
+
+class HotStoreFullError(RuntimeError):
+    pass
+
+
+class MemoryManager:
+    def __init__(
+        self,
+        num_slots: int,
+        dim: int,
+        dtype,
+        orchestrator: Orchestrator,
+        policy: EvictionPolicy,
+        cold: ColdStore,
+    ):
+        self.num_slots = num_slots
+        self.dim = dim
+        self.dtype = np.dtype(dtype)
+        self.orch = orchestrator
+        self.policy = policy
+        self.cold = cold
+        self.hot = np.zeros((num_slots, dim), dtype=self.dtype)
+        self.slot_of = np.full(orchestrator.num_vertices, -1, dtype=np.int64)
+        self.vertex_in_slot = np.full(num_slots, -1, dtype=np.int64)
+        self._free = list(range(num_slots - 1, -1, -1))
+        self.eviction_count = 0
+        self.reload_count = 0
+        self.peak_occupancy = 0
+
+    # ---------------------------------------------------------- occupancy
+    @property
+    def occupancy(self) -> int:
+        return self.num_slots - len(self._free)
+
+    # ------------------------------------------------------------- slots
+    def _alloc_slots(
+        self, n: int, hard_exclude: set[int], soft_exclude: set[int]
+    ) -> list[int]:
+        """Get n free slots, evicting via the policy if necessary.
+
+        ``hard_exclude`` (the vertices being activated right now) may never
+        be evicted; ``soft_exclude`` (other destinations of the current
+        chunk) is an anti-thrash shield that is relaxed when the store is
+        too tight to honour it.
+        """
+        if n > self.num_slots:
+            raise HotStoreFullError(
+                f"batch needs {n} slots but hot store only has {self.num_slots};"
+                " increase hot-store budget or reduce chunk size"
+            )
+        deficit = n - len(self._free)
+        if deficit > 0:
+            victims = self.policy.select_victims(
+                deficit, exclude=hard_exclude | soft_exclude
+            )
+            if len(victims) < deficit:  # shield too broad: relax to hard-only
+                victims = self.policy.select_victims(deficit, exclude=hard_exclude)
+            if len(victims) < deficit:
+                raise HotStoreFullError(
+                    f"cannot evict {deficit} vertices (only {len(victims)}"
+                    " candidates); hot store too small for this batch"
+                )
+            self._evict(np.asarray(victims, dtype=np.int64))
+        return [self._free.pop() for _ in range(n)]
+
+    def _evict(self, victims: np.ndarray) -> None:
+        slots = self.slot_of[victims]
+        self.cold.put(victims, self.hot[slots])
+        for v in victims.tolist():
+            self.policy.remove(v)
+        self.orch.to_cold(victims)
+        self.slot_of[victims] = -1
+        self.vertex_in_slot[slots] = -1
+        self._free.extend(slots.tolist())
+        self.eviction_count += len(victims)
+
+    # ----------------------------------------------------------- activate
+    def activate(
+        self, vertices: np.ndarray, chunk_shield: set[int] | None = None
+    ) -> np.ndarray:
+        """Ensure all `vertices` are HOT with assigned slots.
+
+        `vertices` are unique destinations of the current delivery batch;
+        states may be NOT_STARTED (assign zeroed slot), COLD (reload partial
+        from cold store), or HOT (no-op).  The batch itself is hard-shielded
+        from eviction; the rest of the chunk's destinations (`chunk_shield`)
+        are soft-shielded — evicting a vertex about to receive a message
+        would thrash by definition.
+        """
+        states = self.orch.state[vertices]
+        fresh = vertices[states == ost.NOT_STARTED]
+        frozen = vertices[states == ost.COLD]
+        need = len(fresh) + len(frozen)
+        if need:
+            slots = self._alloc_slots(
+                need,
+                hard_exclude=set(vertices.tolist()),
+                soft_exclude=chunk_shield or set(),
+            )
+            k = len(fresh)
+            if k:
+                fslots = np.asarray(slots[:k], dtype=np.int64)
+                self.hot[fslots] = 0
+                self.slot_of[fresh] = fslots
+                self.vertex_in_slot[fslots] = fresh
+                self.orch.to_hot(fresh)
+                pend = self.orch.pending(fresh)
+                for v, p in zip(fresh.tolist(), pend.tolist()):
+                    self.policy.add(v, int(p))
+            if len(frozen):
+                cslots = np.asarray(slots[k:], dtype=np.int64)
+                self.hot[cslots] = self.cold.take(frozen)
+                self.slot_of[frozen] = cslots
+                self.vertex_in_slot[cslots] = frozen
+                self.orch.to_hot(frozen)
+                pend = self.orch.pending(frozen)
+                for v, p in zip(frozen.tolist(), pend.tolist()):
+                    self.policy.add(v, int(p))
+                self.reload_count += len(frozen)
+        self.peak_occupancy = max(self.peak_occupancy, self.occupancy)
+        return self.slot_of[vertices]
+
+    # ---------------------------------------------------------- aggregate
+    def accumulate(
+        self, vertices: np.ndarray, partial: np.ndarray, col_offset: int = 0
+    ) -> None:
+        """hot[slot(v), off:off+w] += partial_v for unique vertices (all HOT).
+
+        ``col_offset`` supports SAGE's concat layout: self features occupy
+        columns [0, d), neighbor aggregates [d, 2d) (paper §4.3).
+        """
+        slots = self.slot_of[vertices]
+        if np.any(slots < 0):
+            raise RuntimeError("accumulate() on vertex without a hot slot")
+        width = partial.shape[1]
+        self.hot[slots, col_offset : col_offset + width] += partial.astype(
+            self.dtype, copy=False
+        )
+
+    def update_policy_scores(
+        self, vertices: np.ndarray, old_pending: np.ndarray, new_pending: np.ndarray
+    ) -> None:
+        for v, o, nw in zip(vertices.tolist(), old_pending.tolist(), new_pending.tolist()):
+            self.policy.update(v, int(o), int(nw))
+
+    # ----------------------------------------------------------- graduate
+    def release(self, vertices: np.ndarray) -> np.ndarray:
+        """Copy out finalized rows and free slots (HOT -> COMPLETED)."""
+        slots = self.slot_of[vertices]
+        rows = self.hot[slots].copy()
+        for v in vertices.tolist():
+            self.policy.remove(v)
+        self.orch.to_completed(vertices)
+        self.slot_of[vertices] = -1
+        self.vertex_in_slot[slots] = -1
+        self._free.extend(slots.tolist())
+        return rows

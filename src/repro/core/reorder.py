@@ -1,0 +1,89 @@
+"""ATLAS graph reordering (paper §3.8).
+
+Greedy single-pass heuristic: process vertices in decreasing
+
+    Score(u) = ( Σ_{v ∈ Out(u)} 1 / d_in(v) ) / d_out(u)
+
+— the numerator is the marginal gain in global fractional completion
+Δφ(u); the denominator penalises fan-out (how many destination buffers u
+touches).  The new ordering maximises completion rate while bounding the
+number of simultaneously-partial vertices, which empirically cuts vertex
+span ~3× and reloads ~6× (paper Fig 6).
+
+The relabel pass then rewrites topology and streams features old-ID-order →
+new-ID-partitioned sorted spill files, exactly the runtime writer's layout.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph, build_csr, degrees_from_csr
+
+
+def atlas_order(csr: CSRGraph) -> np.ndarray:
+    """Return `order` such that order[rank] = old_vertex_id (rank 0 first).
+
+    Single pass over topology: Score needs only degrees and one segment
+    sum over out-edges.
+    """
+    in_deg, out_deg = degrees_from_csr(csr)
+    inv_in = np.zeros(csr.num_vertices, dtype=np.float64)
+    nz = in_deg > 0
+    inv_in[nz] = 1.0 / in_deg[nz]
+    # numerator: sum of 1/d_in(dst) over each vertex's out-edges
+    gain = np.zeros(csr.num_vertices, dtype=np.float64)
+    dst_inv = inv_in[np.asarray(csr.indices)]
+    # segment-sum by source: out-edges are contiguous per source in CSR
+    np.add.at(gain, np.repeat(np.arange(csr.num_vertices), np.diff(csr.indptr)), dst_inv)
+    score = np.where(out_deg > 0, gain / np.maximum(out_deg, 1), 0.0)
+    # stable descending sort; zero-out-degree sinks go last (they emit
+    # nothing, so placing them early wastes hot-store residency)
+    return np.argsort(-score, kind="stable")
+
+
+def random_order(num_vertices: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).permutation(num_vertices)
+
+
+def original_order(num_vertices: int) -> np.ndarray:
+    return np.arange(num_vertices)
+
+
+def relabel_map(order: np.ndarray) -> np.ndarray:
+    """new_id_of[old_id] given order[rank] = old_id."""
+    new_of = np.empty_like(order)
+    new_of[order] = np.arange(len(order), dtype=order.dtype)
+    return new_of
+
+
+def relabel_graph(csr: CSRGraph, order: np.ndarray) -> CSRGraph:
+    """Rebuild topology under the new vertex numbering."""
+    new_of = relabel_map(order)
+    src, dst = csr.edges_for_range(0, csr.num_vertices)
+    return build_csr(new_of[src], new_of[dst], csr.num_vertices)
+
+
+def relabel_features_chunked(
+    features: np.ndarray, order: np.ndarray, chunk_rows: int = 65536
+) -> np.ndarray:
+    """Features in new-ID order, processed in chunks (paper relabels the
+    on-disk feature matrix streamingly; for in-memory arrays this is a
+    gather, chunked to bound the temporary working set)."""
+    out = np.empty_like(features)
+    new_of = relabel_map(order)
+    for s in range(0, len(features), chunk_rows):
+        e = min(s + chunk_rows, len(features))
+        out[new_of[s:e]] = features[s:e]
+    return out
+
+
+def make_order(name: str, csr: CSRGraph, seed: int = 0) -> np.ndarray:
+    name = name.lower()
+    if name in ("at", "atlas"):
+        return atlas_order(csr)
+    if name in ("rnd", "random"):
+        return random_order(csr.num_vertices, seed)
+    if name in ("og", "original", "none"):
+        return original_order(csr.num_vertices)
+    raise ValueError(f"unknown ordering {name!r}")

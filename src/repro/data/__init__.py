@@ -1,0 +1,3 @@
+"""Deterministic, shardable data pipeline."""
+
+from repro.data.pipeline import SyntheticLMStream, make_global_batch  # noqa: F401

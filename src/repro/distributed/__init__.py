@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, step builders, distributed ATLAS,
+gradient compression, elastic remesh, fault handling."""

@@ -1,0 +1,100 @@
+"""Activation-sharding annotations (GSPMD constraints) for model code.
+
+Model definitions stay mesh-agnostic: they call ``constrain(x, ...)`` with
+*logical* axis names and this module resolves them against an ambient mesh
+(set by the launcher / dry-run).  With no mesh set — unit tests, single
+device — everything is a no-op.
+
+Why this exists (EXPERIMENTS.md §Perf iteration 1): without explicit
+constraints, GSPMD replicates attention over the `model` axis whenever
+the head count doesn't divide the TP degree (e.g. qwen3's 40 q-heads on
+16-way TP) — 16x redundant FLOPs plus activation all-gathers.  The
+annotations pick, per tensor and per mesh:
+
+  * head-parallel attention when heads % tp == 0 (classic Megatron), else
+  * sequence-parallel queries + replicated KV (Ulysses-style context
+    parallelism) — head-count agnostic, comm = one KV gather per layer
+    instead of 16x redundant S^2 compute.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_annotation_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_annotation_mesh():
+    return _MESH
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve(mesh, logical, dim: int):
+    if logical is None:
+        return None
+    if logical == "dp":
+        ax = tuple(a for a in mesh.axis_names if a != "model")
+        ax = ax if len(ax) > 1 else (ax[0] if ax else None)
+    elif logical in ("tp", "sp", "model"):
+        ax = "model" if "model" in mesh.axis_names else None
+    else:
+        ax = logical if logical in mesh.axis_names else None
+    if ax is None or dim % _axis_size(mesh, ax) != 0:
+        return None
+    return ax
+
+
+def constrain(x: jax.Array, *logical):
+    """with_sharding_constraint against the ambient mesh (no-op without)."""
+    if _MESH is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = P(*[_resolve(_MESH, l, d) for l, d in zip(logical, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain_qkv(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Attention inputs [B, H, S, D].  Head-parallel when divisible,
+    else sequence-parallel q + replicated kv."""
+    if _MESH is None:
+        return q, k, v
+    tp = _axis_size(_MESH, "model") if "model" in _MESH.axis_names else 1
+    hq, hkv = q.shape[1], k.shape[1]
+    if hq % tp == 0 and hkv % tp == 0:
+        q = constrain(q, "dp", "tp", None, None)
+        k = constrain(k, "dp", "tp", None, None)
+        v = constrain(v, "dp", "tp", None, None)
+    else:
+        q = constrain(q, "dp", None, "sp", None)
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+    return q, k, v
+
+
+def constrain_attn_out(att: jax.Array, num_kv_heads: int):
+    """Attention output [B, H, S, D]: mirror constrain_qkv's choice
+    EXACTLY — a mismatched output constraint makes GSPMD reshard at the
+    scores level (full S^2 f32 all-gathers; pixtral was 20x
+    collective-bound from this, §Perf iteration 5)."""
+    if _MESH is None:
+        return att
+    tp = _axis_size(_MESH, "model") if "model" in _MESH.axis_names else 1
+    if att.shape[1] % tp == 0 and num_kv_heads % tp == 0:
+        return constrain(att, "dp", "tp", None, None)
+    return constrain(att, "dp", None, "sp", None)

@@ -1,0 +1,186 @@
+"""Sharding rules for the LM zoo on the (pod, data, model) mesh.
+
+Megatron-style TP over `model` (attention heads / ffn / experts / vocab),
+DP over `pod` x `data`, optional FSDP (params + optimizer state sharded
+over `data`, all-gathered at use — GSPMD inserts the gathers).  Rules are
+path-based over the param pytree, so any architecture in the zoo shards
+without per-model code.
+
+Every rule degrades gracefully: an axis is only applied when the dim is
+divisible by the mesh axis size (decode batch=1, tiny smoke configs, and
+elastic re-meshes all hit this).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """axes if dim divides evenly over them, else None (replicate)."""
+    return axes if axes and dim % axis_size(mesh, axes) == 0 else None
+
+
+def _leaf_spec(path: str, shape: tuple, mesh: Mesh, fsdp) -> P:
+    """PartitionSpec for one param leaf.  `path` is '/'-joined key names;
+    stacked block params carry a leading layer axis (never sharded)."""
+    def spec(*axes):
+        fitted = [_fit(mesh, d, a) for d, a in zip(shape, axes)]
+        return P(*fitted)
+
+    stacked = any(
+        k in path for k in ("blocks/", "moe_blocks/", "dense_blocks/", "super/", "tail/")
+    )
+    L = (None,) if stacked else ()
+    name = path.rsplit("/", 1)[-1]
+
+    # ---- top-level ------------------------------------------------------
+    if name == "embed":
+        return spec(None, "model")
+    if name == "lm_head":
+        return spec(fsdp, "model")
+    if name == "final_norm":
+        return P()
+
+    # ---- norms / small vectors -----------------------------------------
+    if name in ("ln1", "ln2", "q_norm", "k_norm", "lam", "a_log", "d_skip",
+                "dt_bias", "down_b"):
+        return P(*(L + (None,) * (len(shape) - len(L))))
+    if name == "norm":  # mamba gated-norm over d_inner (head-sharded)
+        return spec(*L, "model")
+
+    # ---- attention -------------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        return spec(*L, fsdp, "model")
+    if name == "wo" and "mixer" not in path:
+        return spec(*L, "model", fsdp)
+    if name in ("bq", "bk", "bv", "up_b"):
+        return spec(*L, "model")
+
+    # ---- MLP --------------------------------------------------------------
+    if name in ("gate", "up") and "moe/" not in path:
+        return spec(*L, fsdp, "model")
+    if name == "down" and "moe/" not in path:
+        return spec(*L, "model", fsdp)
+
+    # ---- MoE (experts shard over `model` = EP) ----------------------------
+    if "moe/" in path:
+        if name == "router":
+            return P(*(L + (None,) * (len(shape) - len(L))))
+        if name in ("gate", "up"):
+            return spec(*L, "model", fsdp, None)
+        if name == "down":
+            return spec(*L, "model", None, fsdp)
+
+    # ---- Mamba-2 (head-parallel TP) ---------------------------------------
+    if name in ("wz", "wx", "wdt"):
+        return spec(*L, fsdp, "model")
+    if name in ("wb", "wc"):
+        return spec(*L, fsdp, None)
+    if name == "conv_x":
+        return spec(*L, None, "model")
+    if name == "wo":  # mamba/rglru out-projection
+        return spec(*L, "model", fsdp)
+
+    # ---- RG-LRU -----------------------------------------------------------
+    if name in ("in1", "in2"):
+        return spec(*L, fsdp, "model")
+    if name == "conv":
+        return spec(*L, None, "model")
+    if name in ("w_r", "w_i"):  # block-diagonal gates: blocks over model
+        return spec(*L, "model", None, None)
+
+    return P()  # safe default: replicate
+
+
+def _key_name(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(_key_name(k) for k in kp) for kp, _ in flat]
+    return paths, [v for _, v in flat], treedef
+
+
+def param_shardings(mesh: Mesh, params_shape, fsdp: bool = True):
+    """NamedSharding pytree matching `params_shape` (ShapeDtypeStructs)."""
+    fsdp_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+    paths, leaves, treedef = _tree_paths(params_shape)
+    specs = [
+        NamedSharding(mesh, _leaf_spec(p, v.shape, mesh, fsdp_ax))
+        for p, v in zip(paths, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_shardings(mesh: Mesh, batch_shape):
+    dp = dp_axes(mesh)
+
+    def one(v):
+        b = v.shape[0] if v.ndim else 1
+        ax = dp if b % axis_size(mesh, dp) == 0 else None
+        return NamedSharding(mesh, P(*((ax,) + (None,) * (v.ndim - 1)))) if v.ndim else NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape):
+    """Decode-cache rules: batch over DP axes; KV head_dim over `model`
+    (works for any kv-head count incl. MQA); SSM heads / RG-LRU channels
+    over `model`."""
+    dp = dp_axes(mesh)
+    paths, leaves, treedef = _tree_paths(cache_shape)
+
+    def one(path, v):
+        name = path.rsplit("/", 1)[-1]
+        if v.ndim == 0 or name == "length":
+            return NamedSharding(mesh, P())
+        dims = list(v.shape)
+        spec: list = [None] * v.ndim
+        if name in ("k", "v"):  # [L, B, Hkv, S, Dh]
+            # flash-decoding layout (§Perf decode iteration): shard the
+            # SEQUENCE dim over `model` — attention reads stay local and
+            # only softmax stats + the tiny output cross shards, instead
+            # of all-gathering the whole cache every step.
+            spec[1] = _fit(mesh, dims[1], dp)
+            spec[3] = _fit(mesh, dims[3], "model")
+        elif name == "ssm":  # [L, B, H, P, N]
+            spec[1] = _fit(mesh, dims[1], dp)
+            spec[2] = _fit(mesh, dims[2], "model")
+        elif name == "conv":  # [L, B, W, C]
+            spec[1] = _fit(mesh, dims[1], dp)
+            spec[3] = _fit(mesh, dims[3], "model")
+        elif name == "h":  # [L, B, R]
+            spec[1] = _fit(mesh, dims[1], dp)
+            spec[2] = _fit(mesh, dims[2], "model")
+        else:
+            spec[0] = _fit(mesh, dims[0], dp)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, v) for p, v in zip(paths, leaves)]
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,14 @@
+from repro.graphs.csr import CSRGraph, build_csr, build_csc, degrees_from_csr
+from repro.graphs.synth import powerlaw_graph, uniform_graph, make_features
+from repro.graphs.partition import RangePartition
+
+__all__ = [
+    "CSRGraph",
+    "build_csr",
+    "build_csc",
+    "degrees_from_csr",
+    "powerlaw_graph",
+    "uniform_graph",
+    "make_features",
+    "RangePartition",
+]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the ATLAS reproduction.
+
+Kernels (each: <name>.py kernel + ops.py jit wrapper + ref.py oracle):
+  * edge_block_spmm — ATLAS broadcast aggregation as one-hot MXU GEMMs
+  * fused_graduate  — graduation transform act(x @ W + b), fused epilogue
+  * flash_attention — causal GQA flash attention (LM prefill hot-spot)
+  * ssd_chunk       — Mamba-2 state-space-duality chunked scan
+  * rms_norm        — fused RMSNorm (one HBM round trip per row tile)
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    attention,
+    broadcast_aggregate,
+    graduate,
+    ssd,
+)

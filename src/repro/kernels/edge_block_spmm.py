@@ -1,0 +1,125 @@
+"""ATLAS broadcast aggregation as a TPU Pallas kernel.
+
+The paper's CPU hot loop is ``out[dst[e]] += w[e] * feats[src[e]]`` over a
+streamed chunk's edges.  TPUs have no fast random scatter/gather — the
+TPU-idiomatic form (DESIGN.md §2) is the **one-hot MXU formulation**:
+
+    msgs = onehot(src) @ feats        (gather  == GEMM on the MXU)
+    out += onehot(dst)^T @ (w * msgs) (scatter == GEMM on the MXU)
+
+Both one-hots are built on the fly from an iota comparison (never stored
+in HBM).  The kernel tiles edges (Eb), source rows (Vt), destination rows
+(DstT) and the feature dim (Db); the out block [DstT, Db] is revisited and
+accumulated across the two inner grid axes (edge blocks x source tiles),
+which is exactly a blocked SpMM reduction.
+
+Grid: (dst_tiles, d_tiles, e_blocks, src_tiles)   — last axis innermost.
+Padding edges carry src = dst = -1, whose one-hot rows are all-zero, so
+they contribute nothing (no masking needed).
+
+VMEM working set per step (defaults Eb=256, Vt=1024, DstT=256, Db=128,
+fp32): feats 512 KiB + src-onehot 1 MiB + dst-onehot 256 KiB + msgs
+128 KiB + out 128 KiB ≈ 2 MiB — comfortably inside the ~16 MiB/core VMEM,
+and every matmul dim is a multiple of the 128-lane MXU tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(
+    src_ref,  # [Eb, 1] int32 (block over e)
+    dst_ref,  # [Eb, 1] int32
+    w_ref,  # [Eb, 1] f32
+    feats_ref,  # [Vt, Db]
+    out_ref,  # [DstT, Db] f32 accumulator (revisited over e, v)
+    *,
+    e_blocks: int,
+    v_blocks: int,
+):
+    j = pl.program_id(0)  # dst tile
+    e = pl.program_id(2)  # edge block
+    v = pl.program_id(3)  # src tile
+    dst_t, db = out_ref.shape
+    vt = feats_ref.shape[0]
+
+    @pl.when((e == 0) & (v == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    src = src_ref[:, 0]
+    dst = dst_ref[:, 0]
+    w = w_ref[:, 0]
+
+    # gather: one-hot over this source tile (rows outside the tile -> 0)
+    v_ids = v * vt + jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], vt), 1)
+    src_oh = (src[:, None] == v_ids).astype(jnp.float32)
+    msgs = jnp.dot(
+        src_oh, feats_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    msgs = msgs * w[:, None]
+
+    # scatter: one-hot over this destination tile, transposed GEMM
+    j_ids = j * dst_t + jax.lax.broadcasted_iota(
+        jnp.int32, (dst.shape[0], dst_t), 1
+    )
+    dst_oh = (dst[:, None] == j_ids).astype(jnp.float32)
+    out_ref[...] += jnp.dot(
+        dst_oh.T, msgs, preferred_element_type=jnp.float32
+    )
+
+
+def edge_block_spmm(
+    feats: jax.Array,  # [V_src, D]
+    src: jax.Array,  # [E] int32
+    dst: jax.Array,  # [E] int32
+    w: jax.Array,  # [E] float32
+    num_dst: int,
+    *,
+    block_e: int = 256,
+    block_v: int = 1024,
+    block_dst: int = 256,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [num_dst, D] f32: segment-sum of w-scaled source rows."""
+    v_src, d = feats.shape
+    e = src.shape[0]
+
+    def cdiv(a, b):
+        return -(-a // b)
+
+    ep = cdiv(max(e, 1), block_e) * block_e
+    vp = cdiv(v_src, block_v) * block_v
+    jp_ = cdiv(num_dst, block_dst) * block_dst
+    dp = cdiv(d, block_d) * block_d
+
+    feats_p = jnp.zeros((vp, dp), feats.dtype).at[:v_src, :d].set(feats)
+    src_p = jnp.full((ep, 1), -1, jnp.int32).at[:e, 0].set(src.astype(jnp.int32))
+    dst_p = jnp.full((ep, 1), -1, jnp.int32).at[:e, 0].set(dst.astype(jnp.int32))
+    w_p = jnp.zeros((ep, 1), jnp.float32).at[:e, 0].set(w.astype(jnp.float32))
+
+    e_blocks = ep // block_e
+    v_blocks = vp // block_v
+    grid = (jp_ // block_dst, dp // block_d, e_blocks, v_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, e_blocks=e_blocks, v_blocks=v_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, 1), lambda j, k, e, v: (e, 0)),
+            pl.BlockSpec((block_e, 1), lambda j, k, e, v: (e, 0)),
+            pl.BlockSpec((block_e, 1), lambda j, k, e, v: (e, 0)),
+            pl.BlockSpec((block_v, block_d), lambda j, k, e, v: (v, k)),
+        ],
+        out_specs=pl.BlockSpec((block_dst, block_d), lambda j, k, e, v: (j, k)),
+        out_shape=jax.ShapeDtypeStruct((jp_, dp), jnp.float32),
+        interpret=interpret,
+    )(src_p, dst_p, w_p, feats_p)
+    return out[:num_dst, :d]

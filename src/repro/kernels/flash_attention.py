@@ -1,0 +1,128 @@
+"""Causal flash attention (forward) as a TPU Pallas kernel.
+
+The LM prefill hot-spot for the assigned architecture pool.  Online-softmax
+streaming over KV blocks with running (max, sum, acc) carried in VMEM
+scratch; GQA is handled *without* materializing repeated KV heads — the KV
+BlockSpec index_map divides the query-head grid index by the group size.
+
+Grid: (batch*q_heads, q_blocks, kv_blocks), kv innermost.  Causal blocks
+strictly above the diagonal are skipped with ``pl.when`` (no wasted MXU
+work — this is the structural 2x over dense attention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [1, Qb, D]
+    k_ref,  # [1, KVb, D]
+    v_ref,  # [1, KVb, D]
+    out_ref,  # [1, Qb, D]
+    m_ref,  # [Qb, 128] running max (broadcast along lanes)
+    l_ref,  # [Qb, 128] running sum
+    acc_ref,  # [Qb, D]  running numerator
+    *,
+    causal: bool,
+    sm_scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    qb = q_ref.shape[1]
+    kvb = k_ref.shape[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: kv block fully above the diagonal contributes nothing
+    needed = True
+    if causal:
+        needed = ki * kvb <= qi * qb + qb - 1
+
+    @pl.when(needed)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [Qb, KVb]
+        if causal:
+            q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 0)
+            k_pos = ki * kvb + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[:, :1]  # [Qb, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # [Qb, 1]
+        p = jnp.exp(s - m_new)  # [Qb, KVb]
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        out_ref[0] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Hq, S, D]
+    k: jax.Array,  # [B, Hkv, S, D]
+    v: jax.Array,  # [B, Hkv, S, D]
+    causal: bool = True,
+    *,
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert s % block_q == 0 and s % block_kv == 0, (
+        f"seq {s} must be a multiple of block sizes ({block_q},{block_kv})"
+    )
+    sm_scale = 1.0 / (d**0.5)
+
+    qf = q.reshape(b * hq, s, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+
+    # GQA without repeat: q-head bh -> kv-head (bh // group) within batch
+    def kv_map(bh, qi, ki):
+        return (bh // group, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, sm_scale=sm_scale),
+        grid=(b * hq, s // block_q, s // block_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, d)

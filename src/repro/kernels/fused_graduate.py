@@ -1,0 +1,89 @@
+"""Fused graduation transform: ``act(x @ w + b)`` (paper §3.6).
+
+The graduation processor finalizes aggregated rows and applies the layer's
+dense update on the accelerator.  On TPU we fuse matmul + bias + activation
+into one Pallas kernel so finalized rows make a single HBM->VMEM->HBM trip
+(the paper's GPU path makes two: GEMM then epilogue).
+
+Grid (m, n, k), k innermost; a VMEM f32 scratch accumulates partial
+products across k; bias/activation epilogue runs on the last k step only.
+Block shapes default to MXU-native 128 multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _graduate_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, activation: str):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif activation == "gelu":
+            out = jax.nn.gelu(out)
+        out_ref[...] = out.astype(out_ref.dtype)
+
+
+def fused_graduate(
+    x: jax.Array,  # [N, K] finalized aggregate rows
+    w: jax.Array,  # [K, M] layer weight
+    b: jax.Array,  # [M] bias
+    activation: str = "relu",  # 'none' | 'relu' | 'gelu'
+    *,
+    block_n: int = 256,
+    block_k: int = 512,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    if activation not in ("none", "relu", "gelu"):
+        raise ValueError(activation)
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    def cdiv(a, b_):
+        return -(-a // b_)
+
+    np_, kp, mp = (
+        cdiv(n, block_n) * block_n,
+        cdiv(k, block_k) * block_k,
+        cdiv(m, block_m) * block_m,
+    )
+    x_p = jnp.zeros((np_, kp), x.dtype).at[:n, :k].set(x)
+    w_p = jnp.zeros((kp, mp), w.dtype).at[:k, :m].set(w)
+    b_p = jnp.zeros((1, mp), b.dtype).at[0, :m].set(b)
+
+    out = pl.pallas_call(
+        functools.partial(_graduate_kernel, activation=activation),
+        grid=(np_ // block_n, mp // block_m, kp // block_k),
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, j, k_: (i, k_)),
+            pl.BlockSpec((block_k, block_m), lambda i, j, k_: (k_, j)),
+            pl.BlockSpec((1, block_m), lambda i, j, k_: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j, k_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_n, block_m), jnp.float32)],
+        interpret=interpret,
+    )(x_p, w_p, b_p)
+    return out[:n, :m]

@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth the kernels/tests compare
+against (fp32 1e-5 / bf16 1e-2 relative, see tests/test_kernels_*.py).
+No Pallas, no pallas_call — plain jax.numpy only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# edge_block_spmm: the ATLAS broadcast hot-spot.
+#   out[dst[e]] += w[e] * feats[src[e]]   for every edge e
+# --------------------------------------------------------------------------
+
+
+def edge_block_spmm_ref(
+    feats: jax.Array,  # [V_src, D]
+    src: jax.Array,  # [E] int32, indices into feats rows
+    dst: jax.Array,  # [E] int32, indices into output rows
+    w: jax.Array,  # [E] float
+    num_dst: int,
+) -> jax.Array:
+    msgs = feats[src] * w[:, None].astype(feats.dtype)
+    return jax.ops.segment_sum(msgs, dst, num_segments=num_dst)
+
+
+# --------------------------------------------------------------------------
+# fused_graduate: the graduation transform (paper §3.6 GPU step).
+#   out = act(x @ w + b), act in {none, relu, gelu}
+# --------------------------------------------------------------------------
+
+
+def fused_graduate_ref(
+    x: jax.Array,  # [N, K]
+    w: jax.Array,  # [K, M]
+    b: jax.Array,  # [M]
+    activation: str = "relu",
+) -> jax.Array:
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# flash_attention: LM prefill hot-spot (GQA-aware wrapper lives in ops.py).
+#   softmax(q k^T / sqrt(d) + causal_mask) v, per (batch, head)
+# --------------------------------------------------------------------------
+
+
+def mha_attention_ref(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, H, S, D]
+    v: jax.Array,  # [B, H, S, D]
+    causal: bool = True,
+) -> jax.Array:
+    d = q.shape[-1]
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def gqa_attention_ref(
+    q: jax.Array,  # [B, Hq, S, D]
+    k: jax.Array,  # [B, Hkv, S, D]
+    v: jax.Array,  # [B, Hkv, S, D]
+    causal: bool = True,
+) -> jax.Array:
+    hq, hkv = q.shape[1], k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    return mha_attention_ref(q, k, v, causal=causal)
+
+
+# --------------------------------------------------------------------------
+# ssd_chunk: Mamba-2 state-space-duality chunked scan (one chunk step).
+# Computes, for a single chunk of length T:
+#   y_t = Σ_{s<=t} (Π_{r=s+1..t} a_r) (x_s b_s^T) c_t  + state-in term
+# plus the chunk's outgoing state.  Oracle is the naive recurrence.
+# --------------------------------------------------------------------------
+
+
+def ssd_chunk_ref(
+    x: jax.Array,  # [T, P]   (head dim values)
+    a: jax.Array,  # [T]      per-step decay (0 < a <= 1)
+    b: jax.Array,  # [T, N]   input projection (state dim N)
+    c: jax.Array,  # [T, N]   output projection
+    state_in: jax.Array,  # [P, N]
+) -> tuple[jax.Array, jax.Array]:
+    def step(h, inp):
+        xt, at, bt, ct = inp
+        h = at * h + jnp.outer(xt, bt)
+        yt = h @ ct
+        return h, yt
+
+    h, ys = jax.lax.scan(step, state_in.astype(jnp.float32), (x, a, b, c))
+    return ys.astype(x.dtype), h

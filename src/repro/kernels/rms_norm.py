@@ -1,0 +1,51 @@
+"""Fused RMSNorm Pallas kernel.
+
+Every block in the LM zoo runs 2+ RMSNorms per layer; unfused, each is a
+read-reduce-read-write chain.  This kernel does one HBM round trip per
+row tile: load -> f32 mean-of-squares -> rsqrt scale -> store.
+
+Grid: (row_tiles,); the full feature dim stays resident in VMEM per tile
+(d_model ≤ 8192 ⇒ ≤ 4 MiB f32 at the default 128-row tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, scale_ref, out_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    out_ref[...] = (y * (1.0 + scale_ref[...].astype(jnp.float32))).astype(
+        out_ref.dtype
+    )
+
+
+def rms_norm_fused(
+    x: jax.Array,  # [N, D]
+    scale: jax.Array,  # [D]
+    eps: float = 1e-6,
+    *,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n, d = x.shape
+    pad = (-n) % block_n
+    x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=((n + pad) // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, d), x.dtype),
+        interpret=interpret,
+    )(x_p, scale[None, :])
+    return out[:n]

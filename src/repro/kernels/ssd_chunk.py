@@ -1,0 +1,99 @@
+"""Mamba-2 SSD (state-space duality) chunk scan as a TPU Pallas kernel.
+
+The SSD insight: within a chunk of length T the recurrence
+``h_t = a_t h_{t-1} + x_t b_t^T ; y_t = h_t c_t`` is *dual* to a masked
+attention-like form that runs on the MXU:
+
+    L[t,s]  = exp(cumlog_a[t] - cumlog_a[s])      for t >= s else 0
+    y_intra = (L ∘ (C B^T)) X                     (two GEMMs + mask)
+    y_inter = exp(cumlog_a) * (C state_in^T)      (carried-state readout)
+    state'  = exp(cl[T-1]) state_in + (w ∘ X)^T B,  w_s = exp(cl[T-1]-cl[s])
+
+The chunk-to-chunk state recurrence is sequential; TPU Pallas grids
+iterate sequentially, so the carried state lives in a VMEM scratch that
+persists across the innermost (chunk) grid axis — no HBM round-trip for
+the state between chunks.
+
+Grid: (batch*heads, num_chunks), chunks innermost.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [1, T, P]
+    a_ref,  # [1, T, 1]  per-step decay in (0, 1]
+    b_ref,  # [1, T, N]
+    c_ref,  # [1, T, N]
+    y_ref,  # [1, T, P] out
+    state_ref,  # [P, N] f32 scratch, carried across chunk axis
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # [T, P]
+    a = a_ref[0, :, 0].astype(jnp.float32)  # [T]
+    bmat = b_ref[0].astype(jnp.float32)  # [T, N]
+    cmat = c_ref[0].astype(jnp.float32)  # [T, N]
+    t = x.shape[0]
+
+    cl = jnp.cumsum(jnp.log(a))  # [T] inclusive cumlog
+    # decay matrix L (t >= s)
+    diff = cl[:, None] - cl[None, :]
+    tt = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    ss = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    l_mat = jnp.where(tt >= ss, jnp.exp(diff), 0.0)
+
+    g = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32) * l_mat
+    y_intra = jnp.dot(g, x, preferred_element_type=jnp.float32)  # [T, P]
+
+    state = state_ref[...]
+    decay_in = jnp.exp(cl)[:, None]  # [T, 1]
+    y_inter = decay_in * jnp.dot(
+        cmat, state.T, preferred_element_type=jnp.float32
+    )  # [T, P]
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    w = jnp.exp(cl[-1] - cl)[:, None]  # [T, 1]
+    state_ref[...] = state * jnp.exp(cl[-1]) + jnp.dot(
+        (w * x).T, bmat, preferred_element_type=jnp.float32
+    )
+
+
+def ssd_scan(
+    x: jax.Array,  # [BH, S, P]
+    a: jax.Array,  # [BH, S]
+    b: jax.Array,  # [BH, S, N]
+    c: jax.Array,  # [BH, S, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Full-sequence SSD scan: y[t] = Σ_{s<=t} Π a * x_s b_s^T c_t."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, f"seq {s} must be a multiple of chunk {chunk}"
+    nc = s // chunk
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a[..., None], b, c)

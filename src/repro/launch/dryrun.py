@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  A --devices override (smoke tests) is honoured by
+# rewriting the flag before jax is imported below.
+import argparse  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    SHAPES,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    list_archs,
+    shape_applicable,
+)
+from repro.distributed.annotate import set_annotation_mesh  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    axis_size,
+    batch_shardings,
+    cache_shardings,
+    dp_axes,
+    param_shardings,
+    replicated,
+)
+from repro.launch.mesh import make_mesh, make_production_mesh  # noqa: E402
+from repro.train.optimizer import AdamWConfig  # noqa: E402
+from repro.train.step import (  # noqa: E402
+    abstract_cache,
+    abstract_params,
+    abstract_train_state,
+    make_serve_prefill,
+    make_serve_step,
+    make_train_step,
+)
+
+BIG_MODEL_PARAMS = 100e9  # bf16 optimizer moments above this (arctic-480b)
+
+
+def _param_count(tree) -> int:
+    return sum(int(v.size) for v in jax.tree.leaves(tree))
+
+
+def _opt_cfg_for(params_abs) -> AdamWConfig:
+    n = _param_count(params_abs)
+    return AdamWConfig(
+        moment_dtype="bfloat16" if n > BIG_MODEL_PARAMS else "float32"
+    )
+
+
+def _opt_shardings(mesh, params_sh):
+    return {
+        "m": params_sh,
+        "v": params_sh,
+        "step": replicated(mesh),
+    }
+
+
+def _logits_sharding(mesh, batch: int, vocab: int):
+    dp = dp_axes(mesh)
+    bax = dp if batch % axis_size(mesh, dp) == 0 else None
+    vax = "model" if vocab % axis_size(mesh, "model") == 0 else None
+    return NamedSharding(mesh, P(bax, vax))
+
+
+def lower_cell(cfg, shape, mesh, fsdp: bool = True):
+    """Build + lower the step function for one (arch x shape) cell.
+    Returns (lowered, meta)."""
+    specs = input_specs(cfg, shape)
+    batch_sh = batch_shardings(mesh, specs)
+    params_abs = abstract_params(cfg)
+    params_sh = param_shardings(mesh, params_abs, fsdp=fsdp)
+    meta = {"params": _param_count(params_abs)}
+
+    if shape.kind == "train":
+        opt_cfg = _opt_cfg_for(params_abs)
+        meta["moment_dtype"] = opt_cfg.moment_dtype
+        state_abs = abstract_train_state(cfg, opt_cfg)
+        state_sh = {"params": params_sh, "opt": _opt_shardings(mesh, params_sh)}
+        metrics_sh = {k: replicated(mesh) for k in ("grad_norm", "lr", "loss")}
+        step = make_train_step(cfg, opt_cfg)
+        lowered = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,),
+        ).lower(state_abs, specs)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        cache_abs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cache_sh = cache_shardings(mesh, cache_abs)
+        logits_sh = _logits_sharding(mesh, shape.global_batch, cfg.vocab_size)
+        step = make_serve_prefill(cfg)
+        lowered = jax.jit(
+            step,
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(logits_sh, cache_sh),
+        ).lower(params_abs, specs)
+        return lowered, meta
+
+    if shape.kind == "decode":
+        cache_abs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cache_sh = cache_shardings(mesh, cache_abs)
+        logits_sh = _logits_sharding(mesh, shape.global_batch, cfg.vocab_size)
+        step = make_serve_step(cfg)
+        lowered = jax.jit(
+            step,
+            in_shardings=(params_sh, cache_sh, batch_sh),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(1,),
+        ).lower(params_abs, cache_abs, specs)
+        return lowered, meta
+
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch, shape_name, mesh, mesh_tag, outdir, smoke=False, save_hlo=True):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    shape = SHAPES[shape_name]
+    cell_id = f"{arch}__{shape_name}__{mesh_tag}"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "mesh_shape": dict(mesh.shape), "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        print(f"[dryrun] SKIP {cell_id}: {reason}")
+        return rec
+
+    t0 = time.time()
+    try:
+        set_annotation_mesh(mesh)
+        lowered, meta = lower_cell(cfg, shape, mesh)
+        rec.update(meta)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        print(f"[dryrun] {cell_id} memory_analysis:", mem)
+        cost = compiled.cost_analysis()
+        print(f"[dryrun] {cell_id} cost_analysis:",
+              {k: v for k, v in sorted(cost.items())
+               if k in ("flops", "bytes accessed", "transcendentals")})
+        rec["memory_analysis"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        }
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+        }
+        if save_hlo:
+            hlo_path = os.path.join(outdir, f"{cell_id}.hlo.gz")
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(compiled.as_text())
+            rec["hlo"] = hlo_path
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        traceback.print_exc()
+    rec["total_s"] = round(time.time() - t0, 2)
+    print(f"[dryrun] {cell_id}: {rec['status']} ({rec['total_s']}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--devices", type=int, default=512)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override, e.g. '2,4' or '2,2,2' (smoke tests)")
+    ap.add_argument("--smoke", action="store_true", help="reduced configs")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh_shape:
+        dims = tuple(int(x) for x in args.mesh_shape.split(","))
+        axes = ("pod", "data", "model") if len(dims) == 3 else ("data", "model")
+        tag = "x".join(map(str, dims))
+        meshes.append((make_mesh(dims, axes), tag))
+    else:
+        if args.mesh in ("single", "both"):
+            meshes.append((make_production_mesh(multi_pod=False), "16x16"))
+        if args.mesh in ("multi", "both"):
+            meshes.append((make_production_mesh(multi_pod=True), "2x16x16"))
+
+    results = []
+    for mesh, tag in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh, tag, args.out,
+                               smoke=args.smoke, save_hlo=not args.no_hlo)
+                results.append(rec)
+                # incremental persistence: a crash keeps completed cells
+                path = os.path.join(
+                    args.out,
+                    f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json",
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"/ {len(results)} cells")
+    if n_fail:
+        for r in results:
+            if r["status"] == "fail":
+                print("  FAIL", r["arch"], r["shape"], r["mesh"], "->", r["error"])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Training launcher: ``--arch <id>`` from the registry, sharded over the
+available devices (elastic mesh), synthetic data, checkpoints.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+        --steps 20 --batch 4 --seq 64
+
+Full configs are for the pod meshes (see launch/dryrun.py); --smoke picks
+the reduced same-family config so the driver also runs on CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.distributed.annotate import set_annotation_mesh
+from repro.distributed.elastic import elastic_mesh
+from repro.distributed.sharding import batch_shardings, param_shardings, replicated
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--model-parallel", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = elastic_mesh(jax.device_count(), model_parallel=args.model_parallel)
+    set_annotation_mesh(mesh)
+    print(f"[train] {cfg.name} on mesh {dict(mesh.shape)}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    state = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    psh = param_shardings(mesh, state["params"])
+    ssh = {"params": psh, "opt": {"m": psh, "v": psh, "step": replicated(mesh)}}
+    state = jax.device_put(state, ssh)
+    n = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
+    print(f"[train] {n / 1e6:.1f}M params")
+
+    def data(step):
+        k = jax.random.PRNGKey(step)
+        toks = jax.random.randint(k, (args.batch, args.seq + 1), 0, cfg.vocab_size)
+        batch = {"labels": toks[:, 1:]}
+        if cfg.input_mode == "tokens":
+            batch["tokens"] = toks[:, :-1]
+        else:
+            batch["embeddings"] = jax.random.normal(
+                k, (args.batch, args.seq, cfg.d_model), jnp.float32)
+        return batch
+
+    bsh = batch_shardings(mesh, jax.eval_shape(lambda: data(0)))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg),
+                      in_shardings=(ssh, bsh), out_shardings=(ssh, None),
+                      donate_argnums=(0,))
+    mgr = CheckpointManager(args.ckpt) if args.ckpt else None
+    t0 = time.time()
+    for s in range(args.steps):
+        state, m = step_fn(state, jax.device_put(data(s), bsh))
+        if (s + 1) % 10 == 0 or s == 0:
+            print(f"[train] step {s + 1:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+        if mgr and (s + 1) % 50 == 0:
+            mgr.save(s + 1, state)
+    if mgr:
+        mgr.wait()
+    print(f"[train] {args.steps} steps in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Message-passing GNN layer definitions + in-memory reference oracle.
+
+The three models evaluated in the paper (§4.1): GraphConv/GCN [Kipf &
+Welling], SAGEConv (mean) [Hamilton et al.] and GINConv [Xu et al.].
+Each layer is described by a ``GNNLayerSpec`` that the broadcast engine,
+the gather baselines, and the dense oracle all consume, so semantic
+equivalence is checked against one single definition:
+
+  GCN   m_{u->v} = h_u / sqrt(d_in(u) d_in(v))   (self-loops in topology)
+        h'_v = act(W @ Σ m + b)
+  SAGE  m_{u->v} = h_u / d_in(v)                 (mean over in-neighbors)
+        h'_v = act(W @ [h_v ; Σ m] + b)          (self-concat)
+  GIN   m_{u->v} = h_u
+        h'_v = MLP((1+eps) h_v + Σ m)            (2-layer MLP)
+
+The broadcast engine realises the self term for SAGE/GIN as an extra
+"self message" deposited when the vertex's own source chunk streams by
+(required message count = d_in + 1), and for GCN via self-loops — see
+DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph, degrees_from_csr
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNLayerSpec:
+    kind: str  # 'gcn' | 'sage' | 'gin'
+    in_dim: int
+    out_dim: int
+    activation: bool  # ReLU after update (False on final layer)
+    params: dict  # numpy weights
+
+    @property
+    def hot_width(self) -> int:
+        """Columns of partial state per vertex in the hot store.
+
+        SAGE doubles the width (self ; neighbor-agg) — the paper calls out
+        the resulting eviction pressure explicitly (§4.3).
+        """
+        return 2 * self.in_dim if self.kind == "sage" else self.in_dim
+
+    @property
+    def extra_self_message(self) -> bool:
+        return self.kind in ("sage", "gin")
+
+
+def init_gnn_params(
+    kind: str, dims: Sequence[int], seed: int = 0, gin_eps: float = 0.0
+) -> list[GNNLayerSpec]:
+    """Glorot-initialised stack of layers; dims = [in, hidden, ..., out]."""
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(len(dims) - 1):
+        d_in, d_out = dims[i], dims[i + 1]
+        final = i == len(dims) - 2
+        if kind == "gcn":
+            w = _glorot(rng, (d_in, d_out))
+            params = {"w": w, "b": np.zeros(d_out, np.float32)}
+        elif kind == "sage":
+            w = _glorot(rng, (2 * d_in, d_out))
+            params = {"w": w, "b": np.zeros(d_out, np.float32)}
+        elif kind == "gin":
+            h = max(d_in, d_out)
+            params = {
+                "w1": _glorot(rng, (d_in, h)),
+                "b1": np.zeros(h, np.float32),
+                "w2": _glorot(rng, (h, d_out)),
+                "b2": np.zeros(d_out, np.float32),
+                "eps": np.float32(gin_eps),
+            }
+        else:
+            raise ValueError(f"unknown GNN kind {kind!r}")
+        specs.append(
+            GNNLayerSpec(
+                kind=kind,
+                in_dim=d_in,
+                out_dim=d_out,
+                activation=not final,
+                params=params,
+            )
+        )
+    return specs
+
+
+def _glorot(rng, shape) -> np.ndarray:
+    limit = np.sqrt(6.0 / (shape[0] + shape[1]))
+    return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Edge weights (message normalisation, applied at construction time, §3.4)
+# --------------------------------------------------------------------------
+
+
+def edge_weights(
+    kind: str, src: np.ndarray, dst: np.ndarray, in_deg: np.ndarray
+) -> np.ndarray:
+    """Per-edge scalar applied to the source embedding."""
+    if kind == "gcn":
+        d = np.maximum(in_deg, 1).astype(np.float64)
+        return (1.0 / np.sqrt(d[src] * d[dst])).astype(np.float32)
+    if kind == "sage":
+        d = np.maximum(in_deg, 1).astype(np.float64)
+        return (1.0 / d[dst]).astype(np.float32)
+    if kind == "gin":
+        return np.ones(len(src), dtype=np.float32)
+    raise ValueError(kind)
+
+
+def self_coefficient(spec: GNNLayerSpec) -> float:
+    """Scale applied to a vertex's own embedding in its self message."""
+    if spec.kind == "gin":
+        return 1.0 + float(spec.params["eps"])
+    return 1.0  # sage: raw copy into the self half
+
+
+# --------------------------------------------------------------------------
+# Layer update (the graduation transform — the accelerator step)
+# --------------------------------------------------------------------------
+
+
+def layer_update(spec: GNNLayerSpec, agg: np.ndarray) -> np.ndarray:
+    """Dense transform on finalized aggregate rows [n, hot_width]."""
+    if spec.kind in ("gcn", "sage"):
+        out = agg @ spec.params["w"] + spec.params["b"]
+    elif spec.kind == "gin":
+        h = agg @ spec.params["w1"] + spec.params["b1"]
+        h = np.maximum(h, 0.0)
+        out = h @ spec.params["w2"] + spec.params["b2"]
+    else:
+        raise ValueError(spec.kind)
+    if spec.activation:
+        out = np.maximum(out, 0.0)
+    return out.astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Dense in-memory reference (the oracle, paper §4.1's "reference")
+# --------------------------------------------------------------------------
+
+
+def dense_reference(
+    csr: CSRGraph, features: np.ndarray, specs: list[GNNLayerSpec]
+) -> np.ndarray:
+    """Full-graph layer-wise inference, everything in memory.
+
+    Used to validate broadcast == gather == reference (paper reports
+    mean-max-abs err 8e-5 on Papers at fp32).
+    """
+    in_deg, _ = degrees_from_csr(csr)
+    src, dst = csr.edges_for_range(0, csr.num_vertices)
+    h = features.astype(np.float32)
+    for spec in specs:
+        w = edge_weights(spec.kind, src, dst, in_deg)
+        msgs = h[src] * w[:, None]
+        agg = np.zeros((csr.num_vertices, spec.in_dim), dtype=np.float32)
+        np.add.at(agg, dst, msgs)
+        if spec.kind == "sage":
+            agg = np.concatenate([h * self_coefficient(spec), agg], axis=1)
+        elif spec.kind == "gin":
+            agg = agg + h * self_coefficient(spec)
+        h = layer_update(spec, agg)
+    return h

@@ -1,0 +1,166 @@
+"""Mamba-2 block (SSD — state-space duality), mamba2-2.7b.
+
+Projections are stored *per component* (z / x / B / C / dt) rather than as
+one fused in_proj so each piece gets its natural TP sharding: z, x and dt
+shard by head over `model`; the group-shared B/C projections replicate
+(ngroups=1).  The SSD scan is head-local, so tensor parallelism needs no
+collectives inside the sequence mixer at all — only the out-projection's
+row-parallel all-reduce (DESIGN.md §5).
+
+Train path: chunked SSD in pure JAX (scan over chunks) — the semantics
+twin of ``kernels/ssd_chunk.py`` (Pallas, VMEM-carried state), which tests
+assert against.  Decode path: O(1) recurrent state update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_mamba_block(key, d_model: int, d_state: int, head_dim: int, conv_width: int, dtype) -> dict:
+    d_inner = 2 * d_model
+    nheads = d_inner // head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d_model, d_inner, dtype),
+        "wx": dense_init(ks[1], d_model, d_inner, dtype),
+        "wb": dense_init(ks[2], d_model, d_state, dtype),
+        "wc": dense_init(ks[3], d_model, d_state, dtype),
+        "wdt": dense_init(ks[4], d_model, nheads, dtype),
+        "conv_x": (jax.random.normal(ks[5], (conv_width, d_inner), jnp.float32) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "wo": dense_init(ks[6], d_inner, d_model, dtype),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x [B, S, C], w [W, C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # width is tiny (4): unrolled adds, no gather
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, H, P]  (dt already folded into x)
+    a: jax.Array,  # [B, S, H]     per-step decay in (0, 1]
+    bmat: jax.Array,  # [B, S, N]
+    cmat: jax.Array,  # [B, S, N]
+    chunk: int = 256,
+) -> jax.Array:
+    """Chunked SSD scan (same math as kernels/ssd_chunk.py)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    tt = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+
+    def step(state, inp):  # state [B, H, P, N]
+        xk, ak, bk, ck = inp  # [B,T,H,P], [B,T,H], [B,T,N], [B,T,N]
+        cl = jnp.cumsum(jnp.log(ak.astype(jnp.float32)), axis=1)  # [B,T,H]
+        lmat = jnp.where(
+            tt[None, :, :, None],
+            jnp.exp(cl[:, :, None, :] - cl[:, None, :, :]),
+            0.0,
+        )  # [B, T, T', H]
+        cb = jnp.einsum("btn,bsn->bts", ck, bk).astype(jnp.float32)  # [B,T,T']
+        g = cb[..., None] * lmat  # [B,T,T',H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", g, xk.astype(jnp.float32))
+        decay_in = jnp.exp(cl)  # [B,T,H]
+        y_inter = decay_in[..., None] * jnp.einsum(
+            "btn,bhpn->bthp", ck.astype(jnp.float32), state
+        )
+        w = jnp.exp(cl[:, -1:, :] - cl)  # [B,T,H]
+        new_state = state * jnp.exp(cl[:, -1])[:, :, None, None] + jnp.einsum(
+            "bthp,btn->bhpn", (w[..., None] * xk.astype(jnp.float32)), bk.astype(jnp.float32)
+        )
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, state0,
+        (xc.swapaxes(0, 1), ac.swapaxes(0, 1), bc.swapaxes(0, 1), cc.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1).reshape(b, s, h, p)
+
+
+def mamba_forward(params: dict, x: jax.Array, *, head_dim: int, chunk: int = 256) -> jax.Array:
+    """Full-sequence Mamba-2 mixer. x [B, S, D] -> [B, S, D]."""
+    b, s, _ = x.shape
+    z = x @ params["wz"]  # [B, S, di]
+    xin = x @ params["wx"]
+    bproj = x @ params["wb"]  # [B, S, N]
+    cproj = x @ params["wc"]
+    dt = x @ params["wdt"]  # [B, S, H]
+
+    xin = jax.nn.silu(causal_conv1d(xin, params["conv_x"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)  # (0,1)
+
+    h = xin.shape[-1] // head_dim
+    xh = xin.reshape(b, s, h, head_dim)
+    xd = xh * dt[..., None].astype(xh.dtype)  # fold dt into the input
+    y = ssd_chunked(xd, a, bproj, cproj, chunk=chunk)
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, s, -1)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(z)
+    return y @ params["wo"]
+
+
+# --------------------------------------------------------------- decode
+
+
+def init_mamba_cache(d_model: int, d_state: int, head_dim: int, conv_width: int, batch: int, dtype):
+    d_inner = 2 * d_model
+    nheads = d_inner // head_dim
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, nheads, head_dim, d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(params: dict, cache: dict, x: jax.Array, *, head_dim: int):
+    """One-token step. x [B, 1, D] -> (y [B, 1, D], new cache)."""
+    b = x.shape[0]
+    xt = x[:, 0]  # [B, D]
+    z = xt @ params["wz"]
+    xin = xt @ params["wx"]  # [B, di]
+    bproj = xt @ params["wb"]  # [B, N]
+    cproj = xt @ params["wc"]
+    dt = xt @ params["wdt"]  # [B, H]
+
+    # conv over the rolling window
+    w = params["conv_x"]  # [W, di]
+    window = jnp.concatenate([cache["conv"], xin[:, None]], axis=1)  # [B, W, di]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    xin_c = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)  # [B, H]
+    h = xin_c.shape[-1] // head_dim
+    xh = xin_c.reshape(b, h, head_dim)
+    xd = xh.astype(jnp.float32) * dt[..., None]
+
+    state = cache["ssm"]  # [B, H, P, N]
+    state = state * a[..., None, None] + xd[..., None] * bproj[:, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", state, cproj.astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, -1).astype(x.dtype)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(z)
+    out = (y @ params["wo"])[:, None]
+    return out, {"conv": new_conv, "ssm": state}

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts layer (deepseek-moe-16b, arctic-480b).
+
+Design (DESIGN.md §Arch-applicability): expert dispatch IS a gather/scatter
+by routing indices — the same access-pattern family as ATLAS's broadcast
+aggregation.  We use the TPU-idiomatic *group-local capacity* formulation:
+
+  * tokens are grouped by batch row (the group axis shards over DP axes,
+    so routing math never crosses data shards — no giant all-gathers);
+  * per (group, expert) the top-C tokens by gate value are selected
+    (capacity C = ceil(S * top_k / E * capacity_factor)), dropped beyond;
+  * dispatch is a batched gather, combine is a batched scatter-add whose
+    cross-expert sum GSPMD turns into the EP all-reduce over the model
+    axis (experts shard over `model` — each device computes only its
+    E/|model| experts).
+
+Shared experts (deepseek: always-on) fuse into one wide MLP; arctic's
+dense residual branch runs in parallel with the routed experts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def moe_capacity(seq: int, num_experts: int, top_k: int, factor: float) -> int:
+    c = int(-(-seq * top_k * factor // num_experts))
+    c = max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+    return min(c, seq)  # decode: cannot select more slots than tokens
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    scale = (1.0 / d_model) ** 0.5
+    return {
+        "router": dense_init(ks[0], d_model, num_experts, jnp.float32),
+        "gate": (jax.random.normal(ks[1], (num_experts, d_model, d_ff), jnp.float32) * scale).astype(dtype),
+        "up": (jax.random.normal(ks[2], (num_experts, d_model, d_ff), jnp.float32) * scale).astype(dtype),
+        "down": (jax.random.normal(ks[3], (num_experts, d_ff, d_model), jnp.float32) * (1.0 / d_ff) ** 0.5).astype(dtype),
+    }
+
+
+def moe_forward(
+    params: dict,
+    x: jax.Array,  # [B, S, D]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> jax.Array:
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    cap = moe_capacity(s, e, top_k, capacity_factor)
+
+    # --- routing (f32 for stability) --------------------------------------
+    logits = x.astype(jnp.float32) @ params["router"]  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)  # [B, S, K]
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)  # renorm
+    # gate[b, s, e] = normalized prob if e in token's top-k else 0
+    gates = jnp.zeros((b, s, e), jnp.float32)
+    gates = jax.vmap(jax.vmap(lambda g, i, v: g.at[i].set(v)))(gates, top_idx, top_vals)
+
+    # --- per-(group, expert) capacity selection ---------------------------
+    # scores [B, E, S]; the C largest gates per expert win a slot.
+    scores = jnp.where(gates > 0.0, gates, -1.0).transpose(0, 2, 1)
+    slot_gate, slot_tok = jax.lax.top_k(scores, cap)  # [B, E, C]
+    slot_valid = slot_gate > 0.0
+    slot_gate = jnp.where(slot_valid, slot_gate, 0.0)
+
+    # --- dispatch: batched gather [B, E, C, D] ----------------------------
+    xe = jnp.take_along_axis(
+        x[:, None], slot_tok[..., None], axis=2
+    )  # [B, E, C, D]
+
+    # --- expert FFN (swiglu), experts shard over `model` ------------------
+    h = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", xe, params["gate"])
+    ) * jnp.einsum("becd,edf->becf", xe, params["up"])
+    ye = jnp.einsum("becf,efd->becd", h, params["down"])  # [B, E, C, D]
+    ye = ye * slot_gate[..., None].astype(ye.dtype)
+
+    # --- combine: scatter-add back to token positions ---------------------
+    out = jnp.zeros((b, s, d), ye.dtype)
+    flat_tok = slot_tok.reshape(b, e * cap)
+    flat_ye = ye.reshape(b, e * cap, d)
+    out = jax.vmap(lambda o, i, v: o.at[i].add(v))(out, flat_tok, flat_ye)
+    return out.astype(x.dtype)
+
+
+def moe_aux_loss(x: jax.Array, router: jax.Array, top_k: int) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style f·P)."""
+    logits = x.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)  # [B, S, E]
+    e = probs.shape[-1]
+    _, top_idx = jax.lax.top_k(probs, top_k)
+    frac = jnp.mean(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=(0, 1, 2))
+    imp = jnp.mean(probs, axis=(0, 1))
+    return e * jnp.sum(frac * imp)

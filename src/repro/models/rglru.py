@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (recurrentgemma-9b / Griffin).
+
+Griffin recurrent block: two linear branches; branch 1 goes through a
+short causal conv then the Real-Gated LRU; branch 2 gates it with GeLU.
+
+  r_t = sigmoid(W_r u_t + b_r)              (recurrence gate)
+  i_t = sigmoid(W_i u_t + b_i)              (input gate)
+  a_t = exp(-c * softplus(Lambda) * r_t)    (per-channel decay, c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence — the linear
+recurrence (a, w) composes associatively, giving O(log S) depth on TPU.
+All recurrence channels shard over `model` (elementwise — no collectives).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru_block(
+    key, d_model: int, d_rnn: int, conv_width: int, dtype, n_gate_blocks: int = 16
+) -> dict:
+    """Gate matrices are block-diagonal (Griffin §2.4) — n_gate_blocks
+    blocks shard naturally over the `model` axis (head-parallel TP)."""
+    nb = min(n_gate_blocks, d_rnn)
+    while d_rnn % nb:
+        nb //= 2
+    blk = d_rnn // nb
+    ks = jax.random.split(key, 6)
+    scale = (1.0 / blk) ** 0.5
+    return {
+        "in1": dense_init(ks[0], d_model, d_rnn, dtype),
+        "in2": dense_init(ks[1], d_model, d_rnn, dtype),
+        "conv": (jax.random.normal(ks[2], (conv_width, d_rnn), jnp.float32) * 0.1).astype(dtype),
+        "w_r": (jax.random.normal(ks[3], (nb, blk, blk), jnp.float32) * scale).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (nb, blk, blk), jnp.float32) * scale).astype(dtype),
+        "lam": jnp.full((d_rnn,), 0.5, jnp.float32),
+        "wo": dense_init(ks[5], d_rnn, d_model, dtype),
+    }
+
+
+def _block_diag_matmul(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u [..., R] x block-diagonal w [nb, blk, blk] -> [..., R]."""
+    nb, blk, _ = w.shape
+    ub = u.reshape(u.shape[:-1] + (nb, blk))
+    out = jnp.einsum("...nb,nbc->...nc", ub, w)
+    return out.reshape(u.shape)
+
+
+def _gates(params: dict, u: jax.Array):
+    r = jax.nn.sigmoid(_block_diag_matmul(u, params["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_matmul(u, params["w_i"]).astype(jnp.float32))
+    a = jnp.exp(-_C * jax.nn.softplus(params["lam"]) * r)
+    w = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, w
+
+
+def rglru_scan(a: jax.Array, w: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """Linear recurrence h_t = a_t h_{t-1} + w_t over axis 1 ([B, S, R])."""
+    if h0 is not None:  # fold the carried state into the first step
+        w = w.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, w1 = x
+        a2, w2 = y
+        return a1 * a2, a2 * w1 + w2
+
+    _, h = jax.lax.associative_scan(combine, (a, w), axis=1)
+    return h
+
+
+def rglru_forward(params: dict, x: jax.Array, conv_fn) -> jax.Array:
+    """Full-sequence recurrent mixer. x [B, S, D] -> [B, S, D]."""
+    u1 = x @ params["in1"]
+    u2 = jax.nn.gelu(x @ params["in2"])
+    u1 = conv_fn(u1, params["conv"])
+    a, w = _gates(params, u1)
+    h = rglru_scan(a, w)
+    y = h.astype(x.dtype) * u2
+    return y @ params["wo"]
+
+
+def init_rglru_cache(d_rnn: int, conv_width: int, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+    }
+
+
+def rglru_decode_step(params: dict, cache: dict, x: jax.Array):
+    """One-token step. x [B, 1, D] -> (y [B, 1, D], new cache)."""
+    xt = x[:, 0]
+    u1 = xt @ params["in1"]  # [B, R]
+    u2 = jax.nn.gelu(xt @ params["in2"])
+    wconv = params["conv"]
+    window = jnp.concatenate([cache["conv"], u1[:, None]], axis=1)  # [B, W, R]
+    u1c = jnp.einsum(
+        "bwr,wr->br", window.astype(jnp.float32), wconv.astype(jnp.float32)
+    ).astype(x.dtype)
+    a, w = _gates(params, u1c)
+    h = a * cache["h"] + w
+    y = (h.astype(x.dtype) * u2) @ params["wo"]
+    return y[:, None], {"conv": window[:, 1:], "h": h}

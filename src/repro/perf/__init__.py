@@ -1,0 +1,1 @@
+"""Performance analysis: HLO static cost model + roofline derivation."""

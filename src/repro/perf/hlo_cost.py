@@ -1,0 +1,344 @@
+"""Static cost model over compiled (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits every while-loop body
+exactly ONCE — for scan-over-layers models it underreports FLOPs/bytes by
+~num_layers x (verified empirically, see EXPERIMENTS.md §Roofline
+methodology).  This parser rebuilds the totals properly:
+
+  1. split the module into computations, with a per-computation symbol
+     table (op name -> shape) so operand shapes resolve;
+  2. walk the call graph from ENTRY accumulating an execution multiplier
+     per computation — while bodies multiply by the loop trip count,
+     parsed from the integer constant in the loop condition computation
+     (scan lowers to `i < C` with C printed as `constant(C)`);
+  3. FLOPs: dots/convolutions (2 * prod(out) * prod(contracted dims)) —
+     MXU work dominates, elementwise is ignored;
+  4. bytes: XLA's own convention (sum of operand + output bytes per op),
+     skipping ops inside fusion bodies (a fusion is one kernel — its
+     operands/outputs are counted at the call site);
+  5. collectives: wire bytes per device per op kind, ring-model factors.
+
+Everything is per-device (the compiled module is the SPMD-partitioned
+per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = re.search(r"[a-z0-9]+\[([\d,]*)\]", type_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict  # op name -> type str
+
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_and_rest(s: str):
+    """'f32[8,64]{1,0} dot(...)' or '(s32[], f32[2]) while(...)'."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, c in enumerate(s):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[: i + 1], s[i + 1 :].strip()
+    i = s.find(" ")
+    if i < 0:
+        return s, ""
+    return s[:i], s[i + 1 :].strip()
+
+
+def parse_module(text: str) -> dict:
+    """-> {computation_name: Computation}; ENTRY stored as '__entry__' too."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                cur = Computation(name=m.group(2), ops=[], symbols={})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry_name = cur.name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, rest = om.group(1), om.group(2)
+        type_str, tail = _split_type_and_rest(rest)
+        km = re.match(r"([\w\-]+)", tail)
+        kind = km.group(1) if km else ""
+        cur.symbols[name] = type_str
+        cur.ops.append(Op(name=name, type_str=type_str, kind=kind, line=stripped))
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _called_comps(op: Op) -> dict:
+    """attr-key -> computation name(s) referenced by this op."""
+    out = {}
+    for key in ("condition", "body", "calls", "to_apply"):
+        m = re.search(rf"{key}=%?([\w.\-]+)", op.line)
+        if m:
+            out.setdefault(key, []).append(m.group(1))
+    m = re.search(r"branches=\{([^}]*)\}", op.line)
+    if m:
+        out["branches"] = [
+            x.strip().lstrip("%") for x in m.group(1).split(",") if x.strip()
+        ]
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition (scan: `i < C`)."""
+    best = 1
+    for op in cond.ops:
+        for m in re.finditer(r"constant\((\d+)\)", op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def compute_multipliers(comps: dict) -> dict:
+    """Execution count per computation, walking the call graph from ENTRY."""
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        comp = comps[name]
+        for op in comp.ops:
+            called = _called_comps(op)
+            if op.kind == "while":
+                trips = 1
+                for cn in called.get("condition", []):
+                    if cn in comps:
+                        trips = _trip_count(comps[cn])
+                for bn in called.get("body", []):
+                    visit(bn, m * trips)
+                for cn in called.get("condition", []):
+                    visit(cn, m * (trips + 1))
+            else:
+                for key, names in called.items():
+                    for n2 in names:
+                        visit(n2, m)
+
+    entry = comps.get("__entry__")
+    entry_name = next(
+        (k for k, v in comps.items() if v is entry and k != "__entry__"),
+        "__entry__",
+    )
+    visit(entry_name, 1.0)
+    return mult
+
+
+def _operand_names(op: Op) -> list[str]:
+    m = re.search(r"\(([^)]*)\)", op.line[op.line.index(op.kind) :])
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 * prod(output dims) * prod(lhs contracting dims)."""
+    out_elems = 1
+    for d in _shape_dims(op.type_str):
+        out_elems *= d
+    ops_names = _operand_names(op)
+    if not ops_names:
+        return 0.0
+    lhs_type = comp.symbols.get(ops_names[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and m.group(1):
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    out_b = _shape_bytes(op.type_str)
+    total = float(out_b)
+    operand_bytes = [
+        _shape_bytes(comp.symbols.get(name, "")) for name in _operand_names(op)
+    ]
+    total += float(sum(operand_bytes))
+    # in-place dynamic-update-slice (cache writes on while carries /
+    # donated buffers): XLA aliases the big operand — real traffic is the
+    # updated slice, not the whole buffer.  Discount the aliased pair.
+    if "dynamic-update-slice" in op.name or op.kind == "dynamic-update-slice":
+        big = max((b for b in operand_bytes if b == out_b), default=0)
+        total -= 2.0 * big
+        total = max(total, 0.0)
+    return total
+
+
+_RING = {  # wire-bytes factor per device, ring algorithms, (n-1)/n ~ 1
+    "all-reduce": 2.0,  # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "iota", "bitcast-convert",
+}
+
+
+_MOVEMENT_OPS = {
+    "convert", "bitcast", "copy", "transpose", "broadcast", "reshape",
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast-convert",
+    "slice", "concatenate", "pad",
+}
+
+
+def _movement_only(comp: Computation) -> bool:
+    """True if a fusion body is pure dtype/layout movement.  The CPU
+    backend wraps every bf16 dot in f32 convert fusions (no native bf16
+    matmul on host); on the TPU target these fold into the MXU op, so the
+    cost model discounts them (methodology note in EXPERIMENTS.md)."""
+    return all(op.kind in _MOVEMENT_OPS for op in comp.ops)
+
+
+def analyze(text: str, discount_movement: bool = True) -> dict:
+    """Per-device totals: flops, bytes, collective wire bytes (by kind)."""
+    comps = parse_module(text)
+    mult = compute_multipliers(comps)
+    # fusion bodies: bytes are accounted at the call site (one kernel)
+    fusion_bodies = set()
+    movement_fusions = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                for names in _called_comps(op).values():
+                    fusion_bodies.update(names)
+                    for n in names:
+                        if n in comps and _movement_only(comps[n]):
+                            movement_fusions.add(op.name + "@" + comp.name)
+
+    flops = 0.0
+    bytes_total = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_count = {k: 0 for k in _COLLECTIVES}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp)
+            kind = op.kind.replace("-start", "")
+            if kind in _COLLECTIVES and not op.kind.endswith("-done"):
+                b = _op_bytes(op, comp) / 2.0  # operands ~= outputs
+                coll[kind] += m * b * _RING[kind]
+                coll_count[kind] += int(m)
+            if not in_fusion and op.kind not in _SKIP_BYTES:
+                if op.kind.endswith("-done"):
+                    continue
+                if (discount_movement
+                        and (op.kind in ("copy", "convert", "transpose",
+                                         "reshape", "broadcast")
+                             or op.name + "@" + cname in movement_fusions)):
+                    continue
+                bytes_total += m * _op_bytes(op, comp)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_total,
+        "collective_bytes": sum(coll.values()),
+        "collectives": coll,
+        "collective_counts": coll_count,
+        "num_computations": len(comps) - 1,
+    }
+
+
+# -------------------------------------------------------------- roofline
+
+V5E = {
+    "peak_flops": 197e12,  # bf16 / chip
+    "hbm_bw": 819e9,  # B/s / chip
+    "ici_bw": 50e9,  # B/s / link
+}
+
+
+def roofline_terms(analysis: dict, hw: dict = V5E) -> dict:
+    compute_s = analysis["flops"] / hw["peak_flops"]
+    memory_s = analysis["bytes"] / hw["hbm_bw"]
+    collective_s = analysis["collective_bytes"] / hw["ici_bw"]
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms

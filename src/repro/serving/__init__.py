@@ -1,0 +1,3 @@
+"""Batched LM serving engine."""
+
+from repro.serving.engine import Request, ServingEngine  # noqa: F401

@@ -1,0 +1,18 @@
+from repro.storage.iostats import IOStats
+from repro.storage.spill import SpillFile, SpillSet, write_spill
+from repro.storage.layout import GraphStore
+from repro.storage.reader import Chunk, ChunkReader
+from repro.storage.writer import EmbeddingWriter
+from repro.storage.coldstore import ColdStore
+
+__all__ = [
+    "IOStats",
+    "SpillFile",
+    "SpillSet",
+    "write_spill",
+    "GraphStore",
+    "Chunk",
+    "ChunkReader",
+    "EmbeddingWriter",
+    "ColdStore",
+]

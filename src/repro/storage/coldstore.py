@@ -1,0 +1,99 @@
+"""Cold store: disk-backed tier for evicted partial aggregation state
+(paper §3.5.3).
+
+Implemented as a slot-file (np.memmap) + host-side vertex→slot map with a
+free list.  Buffered I/O (mmap) is intentional — the paper argues evicted
+vertices are *guaranteed* to be reloaded, so page-cache reuse helps, unlike
+the single-pass feature stream which bypasses the cache.
+
+Reload/evict byte counters feed the Fig 6/7 ablations.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.storage.iostats import IOStats
+
+
+class ColdStore:
+    def __init__(
+        self,
+        path: str,
+        dim: int,
+        dtype=np.float32,
+        initial_slots: int = 1024,
+        stats: IOStats | None = None,
+    ):
+        self.path = path
+        self.dim = dim
+        self.dtype = np.dtype(dtype)
+        self.stats = stats if stats is not None else IOStats()
+        self._capacity = max(1, initial_slots)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._mm = np.memmap(
+            path, dtype=self.dtype, mode="w+", shape=(self._capacity, dim)
+        )
+        self._slot_of: dict[int, int] = {}
+        self._free: list[int] = list(range(self._capacity - 1, -1, -1))
+        self.evict_count = 0
+        self.reload_count = 0
+        self.peak_resident = 0
+
+    # ------------------------------------------------------------- sizing
+    def _grow(self) -> None:
+        new_cap = self._capacity * 2
+        self._mm.flush()
+        new_mm = np.memmap(
+            self.path + ".grow", dtype=self.dtype, mode="w+", shape=(new_cap, self.dim)
+        )
+        new_mm[: self._capacity] = self._mm[:]
+        del self._mm
+        os.replace(self.path + ".grow", self.path)
+        self._mm = new_mm
+        self._free.extend(range(new_cap - 1, self._capacity - 1, -1))
+        self._capacity = new_cap
+
+    # -------------------------------------------------------------- evict
+    def put(self, vertex_ids: np.ndarray, rows: np.ndarray) -> None:
+        """Spill partial states of `vertex_ids` (HOT -> COLD)."""
+        row_bytes = self.dim * self.dtype.itemsize
+        for vid, row in zip(np.asarray(vertex_ids), np.asarray(rows)):
+            vid = int(vid)
+            slot = self._slot_of.get(vid)
+            if slot is None:
+                if not self._free:
+                    self._grow()
+                slot = self._free.pop()
+                self._slot_of[vid] = slot
+            self._mm[slot] = row
+            self.evict_count += 1
+            self.stats.add_write(row_bytes)
+        self.peak_resident = max(self.peak_resident, len(self._slot_of))
+
+    # ------------------------------------------------------------- reload
+    def take(self, vertex_ids: np.ndarray) -> np.ndarray:
+        """Reload partial states (COLD -> HOT) and free the cold slots."""
+        row_bytes = self.dim * self.dtype.itemsize
+        out = np.empty((len(vertex_ids), self.dim), dtype=self.dtype)
+        for i, vid in enumerate(np.asarray(vertex_ids)):
+            vid = int(vid)
+            slot = self._slot_of.pop(vid)
+            out[i] = self._mm[slot]
+            self._free.append(slot)
+            self.reload_count += 1
+            self.stats.add_read(row_bytes)
+        return out
+
+    def contains(self, vertex_id: int) -> bool:
+        return int(vertex_id) in self._slot_of
+
+    @property
+    def resident(self) -> int:
+        return len(self._slot_of)
+
+    def close(self) -> None:
+        self._mm.flush()
+        del self._mm

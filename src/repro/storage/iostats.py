@@ -1,0 +1,56 @@
+"""Byte-level I/O accounting.
+
+The paper's headline metric besides wall time is *bytes read from disk*
+(/proc/<pid>/io, Fig 1 & 4 markers).  Every storage component takes an
+``IOStats`` and records logical bytes moved, so the benchmark harness can
+reproduce the read-amplification comparison exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass
+class IOStats:
+    bytes_read: int = 0
+    bytes_written: int = 0
+    num_reads: int = 0
+    num_writes: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add_read(self, nbytes: int) -> None:
+        with self._lock:
+            self.bytes_read += int(nbytes)
+            self.num_reads += 1
+
+    def add_write(self, nbytes: int) -> None:
+        with self._lock:
+            self.bytes_written += int(nbytes)
+            self.num_writes += 1
+
+    def merge(self, other: "IOStats") -> None:
+        with self._lock:
+            self.bytes_read += other.bytes_read
+            self.bytes_written += other.bytes_written
+            self.num_reads += other.num_reads
+            self.num_writes += other.num_writes
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "bytes_read": self.bytes_read,
+                "bytes_written": self.bytes_written,
+                "num_reads": self.num_reads,
+                "num_writes": self.num_writes,
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.bytes_read = 0
+            self.bytes_written = 0
+            self.num_reads = 0
+            self.num_writes = 0

@@ -1,0 +1,124 @@
+"""On-disk graph store (paper §3.2).
+
+Topology: CSR (`indptr.npy`, `indices.npy`), memory-mapped — O(V+E) on disk,
+sequential offset-based access for the reader.
+Features: one initial sorted spill file per range partition (ids 0..V-1 in
+order), so layer 0 and layer k>0 are read through the identical
+merge-on-read path.
+A JSON manifest records shapes/dtypes/partitioning and makes the store
+re-openable (and resumable mid-inference).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.graphs.partition import RangePartition
+from repro.storage.iostats import IOStats
+from repro.storage.spill import SpillFile, SpillSet, write_spill
+
+
+class GraphStore:
+    def __init__(self, root: str):
+        self.root = root
+        self.manifest_path = os.path.join(root, "manifest.json")
+        self.manifest: dict = {}
+        self._csr: CSRGraph | None = None
+
+    # ------------------------------------------------------------- create
+    @staticmethod
+    def create(
+        root: str,
+        csr: CSRGraph,
+        features: np.ndarray,
+        num_partitions: int = 8,
+        feature_rows_per_spill: int | None = None,
+        stats: IOStats | None = None,
+    ) -> "GraphStore":
+        os.makedirs(root, exist_ok=True)
+        os.makedirs(os.path.join(root, "features_l0"), exist_ok=True)
+        np.save(os.path.join(root, "indptr.npy"), csr.indptr)
+        np.save(os.path.join(root, "indices.npy"), csr.indices)
+        v = csr.num_vertices
+        part = RangePartition(v, num_partitions)
+        files = []
+        for p in range(num_partitions):
+            lo, hi = part.range_of(p)
+            step = feature_rows_per_spill or (hi - lo)
+            for s0 in range(lo, hi, max(step, 1)):
+                s1 = min(s0 + step, hi)
+                path = os.path.join(root, "features_l0", f"part{p:04d}_{s0}.spill")
+                sf = write_spill(
+                    path,
+                    np.arange(s0, s1, dtype=np.uint64),
+                    features[s0:s1],
+                    stats=stats,
+                    presorted=True,
+                )
+                files.append(sf.path)
+        store = GraphStore(root)
+        store.manifest = {
+            "num_vertices": v,
+            "num_edges": csr.num_edges,
+            "feat_dim": int(features.shape[1]),
+            "feat_dtype": str(features.dtype),
+            "num_partitions": num_partitions,
+            "layer0_files": files,
+        }
+        store._write_manifest()
+        return store
+
+    def _write_manifest(self) -> None:
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.manifest, f, indent=2)
+        os.replace(tmp, self.manifest_path)
+
+    # --------------------------------------------------------------- open
+    @staticmethod
+    def open(root: str) -> "GraphStore":
+        store = GraphStore(root)
+        with open(store.manifest_path) as f:
+            store.manifest = json.load(f)
+        return store
+
+    # ------------------------------------------------------------ access
+    @property
+    def num_vertices(self) -> int:
+        return self.manifest["num_vertices"]
+
+    @property
+    def num_edges(self) -> int:
+        return self.manifest["num_edges"]
+
+    @property
+    def feat_dim(self) -> int:
+        return self.manifest["feat_dim"]
+
+    def topology(self) -> CSRGraph:
+        """Memory-mapped CSR topology (not counted as feature I/O; the
+        paper counts topology reads separately and they are O(V+E) once)."""
+        if self._csr is None:
+            indptr = np.load(os.path.join(self.root, "indptr.npy"), mmap_mode="r")
+            indices = np.load(os.path.join(self.root, "indices.npy"), mmap_mode="r")
+            self._csr = CSRGraph(indptr=indptr, indices=indices)
+        return self._csr
+
+    def layer0_spills(self) -> SpillSet:
+        ss = SpillSet()
+        for path in self.manifest["layer0_files"]:
+            ss.add(SpillFile.open(path))
+        return ss
+
+    def layer_dir(self, layer: int) -> str:
+        d = os.path.join(self.root, f"embeddings_l{layer}")
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def topology_nbytes(self) -> int:
+        csr = self.topology()
+        return csr.indptr.nbytes + csr.indices.nbytes

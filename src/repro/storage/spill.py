@@ -1,0 +1,220 @@
+"""Sorted spill files (paper §3.2, §3.7).
+
+Embeddings graduate in arbitrary order; ATLAS never does a global external
+sort.  Instead each range partition accumulates rows in a spill buffer,
+sorts the buffer in memory by vertex ID, and flushes it as an immutable
+*sorted spill file*.  The reader later merges the (few) spill files
+overlapping a chunk's ID range on the fly ("merge-on-read", §3.3).
+
+File format (single binary file, explicit reads so byte accounting is
+exact):
+
+    header: magic 'ATLS' | version u32 | n_rows u64 | dim u32 | dtype code u32
+            | min_id u64 | max_id u64   (40 bytes)
+    ids:    u64 [n_rows]               (sorted ascending)
+    data:   dtype [n_rows, dim]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+
+import numpy as np
+
+from repro.storage.iostats import IOStats
+
+_MAGIC = b"ATLS"
+_VERSION = 1
+_HEADER = struct.Struct("<4sIQIIQQ")  # magic, ver, n, dim, dtype, min, max
+
+_DTYPE_CODES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.float16): 1,
+    np.dtype(np.float64): 2,
+    np.dtype("bfloat16") if "bfloat16" in np.sctypeDict else np.dtype(np.float16): 1,
+}
+_CODE_DTYPES = {0: np.dtype(np.float32), 1: np.dtype(np.float16), 2: np.dtype(np.float64)}
+
+
+def _dtype_code(dtype: np.dtype) -> int:
+    dtype = np.dtype(dtype)
+    if dtype == np.float32:
+        return 0
+    if dtype == np.float16:
+        return 1
+    if dtype == np.float64:
+        return 2
+    raise ValueError(f"unsupported spill dtype {dtype}")
+
+
+def write_spill(
+    path: str,
+    ids: np.ndarray,
+    rows: np.ndarray,
+    stats: IOStats | None = None,
+    presorted: bool = False,
+) -> "SpillFile":
+    """Sort (ids, rows) by id and write one spill file atomically."""
+    ids = np.asarray(ids, dtype=np.uint64)
+    rows = np.ascontiguousarray(rows)
+    if rows.ndim != 2 or len(ids) != len(rows):
+        raise ValueError("rows must be [n, dim] matching ids")
+    if not presorted:
+        order = np.argsort(ids, kind="stable")
+        ids, rows = ids[order], rows[order]
+    n, dim = rows.shape
+    header = _HEADER.pack(
+        _MAGIC,
+        _VERSION,
+        n,
+        dim,
+        _dtype_code(rows.dtype),
+        int(ids[0]) if n else 0,
+        int(ids[-1]) if n else 0,
+    )
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(header)
+        f.write(ids.tobytes())
+        f.write(rows.tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic publish: readers never see partial files
+    if stats is not None:
+        stats.add_write(len(header) + ids.nbytes + rows.nbytes)
+    return SpillFile(
+        path=path,
+        num_rows=n,
+        dim=dim,
+        dtype=rows.dtype,
+        min_id=int(ids[0]) if n else 0,
+        max_id=int(ids[-1]) if n else 0,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SpillFile:
+    """Descriptor of one immutable sorted spill file.
+
+    Descriptors are tiny; file handles are opened lazily per read so open-fd
+    count stays bounded (paper §3.3).
+    """
+
+    path: str
+    num_rows: int
+    dim: int
+    dtype: np.dtype
+    min_id: int
+    max_id: int
+
+    @staticmethod
+    def open(path: str) -> "SpillFile":
+        with open(path, "rb") as f:
+            raw = f.read(_HEADER.size)
+        magic, ver, n, dim, code, min_id, max_id = _HEADER.unpack(raw)
+        if magic != _MAGIC or ver != _VERSION:
+            raise ValueError(f"{path}: not an ATLAS spill file")
+        return SpillFile(
+            path=path,
+            num_rows=n,
+            dim=dim,
+            dtype=_CODE_DTYPES[code],
+            min_id=min_id,
+            max_id=max_id,
+        )
+
+    def _offsets(self) -> tuple[int, int]:
+        ids_off = _HEADER.size
+        data_off = ids_off + self.num_rows * 8
+        return ids_off, data_off
+
+    def read_ids(self, stats: IOStats | None = None) -> np.ndarray:
+        ids_off, _ = self._offsets()
+        with open(self.path, "rb") as f:
+            f.seek(ids_off)
+            buf = f.read(self.num_rows * 8)
+        if stats is not None:
+            stats.add_read(len(buf))
+        return np.frombuffer(buf, dtype=np.uint64)
+
+    def read_id_range(
+        self, start_id: int, end_id: int, stats: IOStats | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Rows with start_id <= id < end_id, via binary search on the sorted
+        id column — one contiguous pread per spill file (paper §3.3)."""
+        if self.num_rows == 0 or start_id > self.max_id or end_id <= self.min_id:
+            return (
+                np.empty(0, dtype=np.uint64),
+                np.empty((0, self.dim), dtype=self.dtype),
+            )
+        ids = self.read_ids(stats)
+        lo = int(np.searchsorted(ids, start_id, side="left"))
+        hi = int(np.searchsorted(ids, end_id, side="left"))
+        if hi <= lo:
+            return (
+                np.empty(0, dtype=np.uint64),
+                np.empty((0, self.dim), dtype=self.dtype),
+            )
+        _, data_off = self._offsets()
+        row_bytes = self.dim * self.dtype.itemsize
+        with open(self.path, "rb") as f:
+            f.seek(data_off + lo * row_bytes)
+            buf = f.read((hi - lo) * row_bytes)
+        if stats is not None:
+            stats.add_read(len(buf))
+        rows = np.frombuffer(buf, dtype=self.dtype).reshape(hi - lo, self.dim)
+        return ids[lo:hi], rows
+
+    def read_all(self, stats: IOStats | None = None) -> tuple[np.ndarray, np.ndarray]:
+        return self.read_id_range(self.min_id, self.max_id + 1, stats)
+
+
+@dataclasses.dataclass
+class SpillSet:
+    """All spill files of one logical tensor (one layer's embeddings),
+    indexed by (min_id, max_id) and sorted by min_id for merge-on-read."""
+
+    files: list[SpillFile] = dataclasses.field(default_factory=list)
+
+    def add(self, f: SpillFile) -> None:
+        self.files.append(f)
+        self.files.sort(key=lambda s: s.min_id)
+
+    def overlapping(self, start_id: int, end_id: int) -> list[SpillFile]:
+        return [
+            f
+            for f in self.files
+            if f.num_rows and f.min_id < end_id and f.max_id >= start_id
+        ]
+
+    def read_id_range(
+        self, start_id: int, end_id: int, stats: IOStats | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Merge-on-read: concatenate overlapping files' row ranges and sort
+        by vertex ID in memory (small: one chunk's worth)."""
+        parts = [
+            f.read_id_range(start_id, end_id, stats)
+            for f in self.overlapping(start_id, end_id)
+        ]
+        parts = [(i, r) for i, r in parts if len(i)]
+        if not parts:
+            dim = self.files[0].dim if self.files else 0
+            dtype = self.files[0].dtype if self.files else np.float32
+            return np.empty(0, dtype=np.uint64), np.empty((0, dim), dtype=dtype)
+        ids = np.concatenate([p[0] for p in parts])
+        rows = np.concatenate([p[1] for p in parts])
+        order = np.argsort(ids, kind="stable")
+        return ids[order], rows[order]
+
+    def total_rows(self) -> int:
+        return sum(f.num_rows for f in self.files)
+
+    def delete_all(self) -> None:
+        for f in self.files:
+            try:
+                os.remove(f.path)
+            except FileNotFoundError:
+                pass
+        self.files.clear()

@@ -1,0 +1,123 @@
+"""Embedding writer (paper §3.7).
+
+Transformed embeddings arrive in graduation order (arbitrary).  The writer
+scatters incoming (ids, rows) batches into per-range-partition spill
+buffers; when a buffer fills it is sorted by vertex ID and flushed as an
+immutable sorted spill file.  Runs in a dedicated thread consuming a write
+queue so GPU/compute never blocks on disk.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+
+import numpy as np
+
+from repro.graphs.partition import RangePartition
+from repro.storage.iostats import IOStats
+from repro.storage.spill import SpillSet, write_spill
+
+
+class EmbeddingWriter:
+    def __init__(
+        self,
+        out_dir: str,
+        num_vertices: int,
+        dim: int,
+        dtype,
+        num_partitions: int = 8,
+        buffer_rows: int = 4096,
+        stats: IOStats | None = None,
+        queue_depth: int = 20,
+        threaded: bool = True,
+    ):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.partition = RangePartition(num_vertices, num_partitions)
+        self.dim = dim
+        self.dtype = np.dtype(dtype)
+        self.buffer_rows = max(1, buffer_rows)
+        self.stats = stats if stats is not None else IOStats()
+        self.spills = SpillSet()
+        self._buf_ids: list[list[np.ndarray]] = [[] for _ in range(num_partitions)]
+        self._buf_rows: list[list[np.ndarray]] = [[] for _ in range(num_partitions)]
+        self._buf_count = [0] * num_partitions
+        self._seq = 0
+        self._rows_written = 0
+        self._lock = threading.Lock()
+        self._threaded = threaded
+        if threaded:
+            self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
+            self._err: list[BaseException] = []
+            self._thread = threading.Thread(
+                target=self._run, name="atlas-writer", daemon=True
+            )
+            self._thread.start()
+
+    # ------------------------------------------------------------ enqueue
+    def write(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        ids = np.asarray(ids, dtype=np.uint64)
+        rows = np.asarray(rows, dtype=self.dtype)
+        if self._threaded:
+            if self._err:
+                raise self._err[0]
+            self._q.put((ids, rows))
+        else:
+            self._ingest(ids, rows)
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                self._ingest(*item)
+            except BaseException as exc:
+                self._err.append(exc)
+                return
+
+    # ------------------------------------------------------------- ingest
+    def _ingest(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        parts = self.partition.part_of(ids)
+        for p in np.unique(parts):
+            sel = parts == p
+            self._buf_ids[p].append(ids[sel])
+            self._buf_rows[p].append(rows[sel])
+            self._buf_count[p] += int(sel.sum())
+            if self._buf_count[p] >= self.buffer_rows:
+                self._flush_partition(int(p))
+
+    def _flush_partition(self, p: int) -> None:
+        if not self._buf_count[p]:
+            return
+        ids = np.concatenate(self._buf_ids[p])
+        rows = np.concatenate(self._buf_rows[p])
+        self._buf_ids[p].clear()
+        self._buf_rows[p].clear()
+        self._buf_count[p] = 0
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        path = os.path.join(self.out_dir, f"spill_p{p:04d}_{seq:06d}.spill")
+        sf = write_spill(path, ids, rows, stats=self.stats)
+        with self._lock:
+            self.spills.add(sf)
+            self._rows_written += sf.num_rows
+
+    # -------------------------------------------------------------- close
+    def close(self) -> SpillSet:
+        """Flush all partial buffers; returns the spill set for this layer."""
+        if self._threaded:
+            self._q.put(None)
+            self._thread.join()
+            if self._err:
+                raise self._err[0]
+        for p in range(self.partition.num_parts):
+            self._flush_partition(p)
+        return self.spills
+
+    @property
+    def rows_written(self) -> int:
+        return self._rows_written

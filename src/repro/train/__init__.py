@@ -1,0 +1,1 @@
+"""Training substrate: sharded AdamW, train-step builder, checkpointing."""

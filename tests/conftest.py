@@ -1,0 +1,27 @@
+import numpy as np
+import pytest
+
+from repro.graphs.csr import add_self_loops
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.storage.layout import GraphStore
+
+
+@pytest.fixture
+def small_graph():
+    """~2k vertices, heavy-tailed, with self-loops (GCN-ready)."""
+    return powerlaw_graph(2048, avg_degree=8, seed=7, self_loops=True)
+
+
+@pytest.fixture
+def small_features():
+    return make_features(2048, 32, seed=3)
+
+
+def build_store(tmp_path, csr, feats, num_partitions=4, rows_per_spill=None):
+    return GraphStore.create(
+        str(tmp_path / "store"),
+        csr,
+        feats,
+        num_partitions=num_partitions,
+        feature_rows_per_spill=rows_per_spill,
+    )

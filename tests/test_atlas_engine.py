@@ -1,0 +1,160 @@
+"""End-to-end semantics: broadcast OOC engine == dense in-memory oracle.
+
+Paper §4.1 reports mean-max-abs-err 8e-5 at fp32 vs the reference; we
+assert the same order of magnitude across models, eviction policies,
+orderings and backends — including configs that force heavy eviction.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.core.reorder import make_order, relabel_features_chunked, relabel_graph, relabel_map
+from repro.graphs.csr import degrees_from_csr
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import dense_reference, init_gnn_params
+from repro.storage.layout import GraphStore
+
+from tests.conftest import build_store
+
+V, D_IN, D_HID, D_OUT = 1200, 24, 16, 8
+
+
+def run_engine(tmp_path, csr, feats, specs, cfg):
+    store = build_store(tmp_path, csr, feats)
+    engine = AtlasEngine(cfg)
+    spills, metrics = engine.run(store, specs, str(tmp_path / "work"))
+    out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
+    return out, metrics
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sage", "gin"])
+def test_broadcast_matches_dense(tmp_path, kind):
+    csr = powerlaw_graph(V, 6, seed=11)
+    feats = make_features(V, D_IN, seed=11)
+    specs = init_gnn_params(kind, [D_IN, D_HID, D_OUT], seed=1)
+    ref = dense_reference(csr, feats, specs)
+    cfg = AtlasConfig(chunk_bytes=64 * D_IN * 4, hot_slots=V)  # no eviction
+    out, metrics = run_engine(tmp_path, csr, feats, specs, cfg)
+    err = np.abs(out - ref).max(axis=1).mean()
+    assert err < 1e-4, f"{kind}: mean-max-abs err {err}"
+    assert metrics[0].graduated == V
+    assert metrics[-1].evictions == 0
+
+
+@pytest.mark.parametrize("policy", ["at", "lru", "rnd"])
+def test_broadcast_under_eviction(tmp_path, policy):
+    """Tiny hot store: partial states must survive evict->reload cycles."""
+    csr = powerlaw_graph(V, 6, seed=13)
+    feats = make_features(V, D_IN, seed=13)
+    specs = init_gnn_params("gcn", [D_IN, D_OUT], seed=2)
+    ref = dense_reference(csr, feats, specs)
+    cfg = AtlasConfig(
+        chunk_bytes=50 * D_IN * 4,
+        hot_slots=V // 8,  # force heavy eviction
+        eviction=policy,
+    )
+    out, metrics = run_engine(tmp_path, csr, feats, specs, cfg)
+    err = np.abs(out - ref).max(axis=1).mean()
+    assert err < 1e-4
+    assert metrics[0].evictions > 0, "test must actually exercise eviction"
+    assert metrics[0].reloads > 0
+
+
+def test_sage_under_eviction_concat_state(tmp_path):
+    """SAGE doubles hot-store width (self ; agg) — both halves must survive
+    the cold-store round trip (paper §4.3)."""
+    csr = powerlaw_graph(800, 5, seed=17)
+    feats = make_features(800, 12, seed=17)
+    specs = init_gnn_params("sage", [12, 8], seed=3)
+    ref = dense_reference(csr, feats, specs)
+    cfg = AtlasConfig(chunk_bytes=40 * 12 * 4, hot_slots=100, eviction="at")
+    out, m = run_engine(tmp_path, csr, feats, specs, cfg)
+    assert m[0].evictions > 0
+    assert np.abs(out - ref).max() < 1e-4
+
+
+def test_jax_backend_matches(tmp_path):
+    csr = powerlaw_graph(600, 5, seed=19)
+    feats = make_features(600, 16, seed=19)
+    specs = init_gnn_params("gin", [16, 8], seed=4)
+    ref = dense_reference(csr, feats, specs)
+    cfg = AtlasConfig(chunk_bytes=64 * 16 * 4, hot_slots=600, backend="jax")
+    out, _ = run_engine(tmp_path, csr, feats, specs, cfg)
+    assert np.abs(out - ref).max() < 1e-4
+
+
+def test_reordered_graph_same_outputs(tmp_path):
+    """ATLAS ordering relabels ids; outputs must match after inverse map."""
+    csr = powerlaw_graph(700, 6, seed=23)
+    feats = make_features(700, 16, seed=23)
+    specs = init_gnn_params("gcn", [16, 8], seed=5)
+    ref = dense_reference(csr, feats, specs)
+
+    order = make_order("at", csr)
+    csr_r = relabel_graph(csr, order)
+    feats_r = relabel_features_chunked(feats, order, chunk_rows=100)
+    cfg = AtlasConfig(chunk_bytes=64 * 16 * 4, hot_slots=120, eviction="at")
+    out_r, _ = run_engine(tmp_path, csr_r, feats_r, specs, cfg)
+    new_of = relabel_map(order)
+    out = out_r[new_of]  # back to original ids
+    assert np.abs(out - ref).max() < 1e-4
+
+
+def test_single_pass_read_property(tmp_path):
+    """Broadcast reads each layer's features once: bytes_read per layer is
+    O(V*d), independent of |E| — the paper's core claim."""
+    d = 32
+    sparse = powerlaw_graph(V, 4, seed=29)
+    dense = powerlaw_graph(V, 24, seed=29)
+    feats = make_features(V, d, seed=29)
+    specs = init_gnn_params("gcn", [d, 8], seed=6)
+    cfg = AtlasConfig(chunk_bytes=64 * d * 4, hot_slots=V)
+    _, m_sparse = run_engine(tmp_path / "a", sparse, feats, specs, cfg)
+    _, m_dense = run_engine(tmp_path / "b", dense, feats, specs, cfg)
+    feat_bytes = V * d * 4
+    for m in (m_sparse[0], m_dense[0]):
+        assert m.bytes_read >= feat_bytes
+    # 6x the edges costs only topology bytes, not feature re-reads:
+    # feature traffic identical, so total read grows far less than edge ratio
+    ratio = m_dense[0].bytes_read / m_sparse[0].bytes_read
+    edge_ratio = dense.num_edges / sparse.num_edges
+    assert ratio < edge_ratio / 2
+
+
+def test_resume_after_simulated_crash(tmp_path):
+    """Layer-transaction fault tolerance: kill after layer 1, resume, and
+    get bit-identical output."""
+    csr = powerlaw_graph(500, 5, seed=31)
+    feats = make_features(500, 16, seed=31)
+    specs = init_gnn_params("gcn", [16, 12, 8], seed=7)
+    store = build_store(tmp_path, csr, feats)
+    cfg = AtlasConfig(chunk_bytes=64 * 16 * 4, hot_slots=500, delete_intermediate=False)
+
+    class CrashBeforeLayer1(AtlasEngine):
+        def run_layer(self, *a, **kw):
+            if kw.get("layer_index") == 1:
+                raise KeyboardInterrupt("simulated preemption")
+            return super().run_layer(*a, **kw)
+
+    with pytest.raises(KeyboardInterrupt):
+        CrashBeforeLayer1(cfg).run(store, specs, str(tmp_path / "work"))
+    # fresh engine resumes from the manifest: layer 0 is skipped
+    spills, metrics = AtlasEngine(cfg).run(
+        store, specs, str(tmp_path / "work"), resume=True
+    )
+    assert len(metrics) == 1 and metrics[0].layer == 1
+    out = spills_to_dense(spills, 500, 8)
+    ref_spills, _ = AtlasEngine(cfg).run(store, specs, str(tmp_path / "work2"))
+    ref = spills_to_dense(ref_spills, 500, 8)
+    assert np.array_equal(out, ref)
+
+
+def test_deterministic_across_runs(tmp_path):
+    csr = powerlaw_graph(400, 5, seed=37)
+    feats = make_features(400, 8, seed=37)
+    specs = init_gnn_params("sage", [8, 4], seed=8)
+    cfg = AtlasConfig(chunk_bytes=32 * 8 * 4, hot_slots=80, eviction="at")
+    a, _ = run_engine(tmp_path / "x", csr, feats, specs, cfg)
+    b, _ = run_engine(tmp_path / "y", csr, feats, specs, cfg)
+    assert np.array_equal(a, b)

@@ -1,0 +1,51 @@
+"""The dry-run launcher itself, exercised end-to-end in a subprocess
+(reduced configs, 8 placeholder devices, tiny meshes)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dryrun(tmp_path, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--devices", "8", "--smoke", "--no-hlo",
+           "--out", str(tmp_path), *args]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=REPO, timeout=900)
+    assert r.returncode == 0, f"\nstdout:{r.stdout[-2000:]}\nstderr:{r.stderr[-2000:]}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen3-14b", "train_4k"),
+    ("mamba2-2.7b", "long_500k"),
+    ("deepseek-moe-16b", "decode_32k"),
+    ("recurrentgemma-9b", "prefill_32k"),
+])
+def test_dryrun_cell_compiles_2d(tmp_path, arch, shape):
+    out = run_dryrun(tmp_path, "--arch", arch, "--shape", shape,
+                     "--mesh-shape", "2,4")
+    assert "memory_analysis" in out and "cost_analysis" in out
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__2x4.json"))
+    assert rec["status"] == "ok"
+    assert rec["cost_analysis"]["flops"] > 0
+
+
+def test_dryrun_multipod_mesh_and_skip(tmp_path):
+    """3-D (pod, data, model) mesh compiles; full-attention long_500k is a
+    recorded skip with a reason."""
+    run_dryrun(tmp_path, "--arch", "qwen2-7b", "--shape", "train_4k",
+               "--mesh-shape", "2,2,2")
+    rec = json.load(open(tmp_path / "qwen2-7b__train_4k__2x2x2.json"))
+    assert rec["status"] == "ok"
+    run_dryrun(tmp_path, "--arch", "qwen2-7b", "--shape", "long_500k",
+               "--mesh-shape", "2,2,2")
+    rec = json.load(open(tmp_path / "qwen2-7b__long_500k__2x2x2.json"))
+    assert rec["status"] == "skip" and "full-attention" in rec["reason"]

@@ -1,0 +1,112 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graphs.csr import (
+    CSRGraph,
+    add_self_loops,
+    build_csc,
+    build_csr,
+    csr_to_csc,
+    degrees_from_csr,
+)
+from repro.graphs.partition import RangePartition
+from repro.graphs.synth import make_features, powerlaw_graph, uniform_graph
+
+
+def test_build_csr_roundtrip():
+    src = np.array([0, 0, 1, 2, 2, 2, 3])
+    dst = np.array([1, 2, 2, 0, 1, 3, 3])
+    csr = build_csr(src, dst, 4)
+    csr.validate()
+    assert csr.num_vertices == 4
+    assert csr.num_edges == 7
+    assert sorted(csr.neighbors(2).tolist()) == [0, 1, 3]
+    s, d = csr.edges_for_range(0, 4)
+    assert sorted(zip(s.tolist(), d.tolist())) == sorted(zip(src, dst))
+
+
+def test_degrees():
+    src = np.array([0, 0, 1, 2])
+    dst = np.array([1, 2, 2, 2])
+    csr = build_csr(src, dst, 3)
+    in_deg, out_deg = degrees_from_csr(csr)
+    assert in_deg.tolist() == [0, 1, 3]
+    assert out_deg.tolist() == [2, 1, 1]
+
+
+def test_self_loops():
+    csr = build_csr(np.array([0, 1]), np.array([1, 0]), 3)
+    looped = add_self_loops(csr)
+    in_deg, _ = degrees_from_csr(looped)
+    assert np.all(in_deg >= 1)
+    assert looped.num_edges == 5
+
+
+def test_csc_transpose():
+    csr = powerlaw_graph(500, 4, seed=1)
+    csc = csr_to_csc(csr)
+    s1, d1 = csr.edges_for_range(0, 500)
+    s2, d2 = csc.edges_for_range(0, 500)
+    assert sorted(zip(s1.tolist(), d1.tolist())) == sorted(zip(d2.tolist(), s2.tolist()))
+
+
+def test_powerlaw_has_heavy_tail():
+    csr = powerlaw_graph(5000, 8, seed=0)
+    in_deg, _ = degrees_from_csr(csr)
+    assert in_deg.max() > 20 * max(in_deg.mean(), 1)  # hubs exist
+
+
+def test_generators_deterministic():
+    a = powerlaw_graph(300, 4, seed=5)
+    b = powerlaw_graph(300, 4, seed=5)
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
+    fa = make_features(300, 8, seed=2)
+    fb = make_features(300, 8, seed=2)
+    assert np.array_equal(fa, fb)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.integers(min_value=1, max_value=500),
+    parts=st.integers(min_value=1, max_value=16),
+)
+def test_partition_properties(v, parts):
+    p = RangePartition(v, parts)
+    b = p.bounds
+    assert b[0] == 0 and b[-1] == v
+    assert np.all(np.diff(b) >= 0)
+    # balanced: sizes differ by at most one
+    sizes = np.diff(b)
+    assert sizes.max() - sizes.min() <= 1
+    if v:
+        ids = np.arange(v)
+        owner = p.part_of(ids)
+        for part in range(parts):
+            lo, hi = p.range_of(part)
+            assert np.all(owner[lo:hi] == part)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    edges=st.lists(
+        st.tuples(st.integers(0, 49), st.integers(0, 49)), min_size=0, max_size=400
+    )
+)
+def test_csr_property_roundtrip(edges):
+    if edges:
+        src = np.array([e[0] for e in edges])
+        dst = np.array([e[1] for e in edges])
+    else:
+        src = np.empty(0, dtype=np.int64)
+        dst = np.empty(0, dtype=np.int64)
+    csr = build_csr(src, dst, 50)
+    csr.validate()
+    s, d = csr.edges_for_range(0, 50)
+    assert sorted(zip(s.tolist(), d.tolist())) == sorted(
+        zip(src.tolist(), dst.tolist())
+    )
+    in_deg, out_deg = degrees_from_csr(csr)
+    assert in_deg.sum() == len(edges) and out_deg.sum() == len(edges)

@@ -1,0 +1,146 @@
+"""Property-based tests (hypothesis) on system invariants.
+
+These pin down the invariants the ATLAS engine's correctness rests on:
+eviction-policy bookkeeping, the orchestrator state machine, sharding
+rules' divisibility guarantees, and the reorder round-trip.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.eviction import make_policy
+from repro.core.orchestrator import COMPLETED, HOT, NOT_STARTED, Orchestrator
+from repro.core.reorder import make_order, relabel_graph, relabel_map
+from repro.distributed.atlas_dist import build_combined_plan, build_edge_plan
+from repro.graphs.csr import degrees_from_csr
+from repro.graphs.synth import powerlaw_graph
+
+
+# ----------------------------------------------------------- eviction
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    policy_name=st.sampled_from(["at", "lru", "rnd"]),
+    ops=st.lists(
+        st.tuples(st.integers(0, 49), st.integers(1, 20)), min_size=1, max_size=200
+    ),
+    k=st.integers(1, 10),
+    seed=st.integers(0, 1000),
+)
+def test_eviction_policy_bookkeeping(policy_name, ops, k, seed):
+    """Invariants: victims are tracked members, never excluded ones,
+    no duplicates, and len() matches the live set under arbitrary
+    add/update/remove interleavings."""
+    policy = make_policy(policy_name, seed=seed)
+    live: dict[int, int] = {}
+    for vertex, pending in ops:
+        if vertex in live:
+            old = live[vertex]
+            if old > 1:
+                policy.update(vertex, old, old - 1)
+                live[vertex] = old - 1
+            else:
+                policy.remove(vertex)
+                del live[vertex]
+        else:
+            policy.add(vertex, pending)
+            live[vertex] = pending
+    assert len(policy) == len(live)
+    exclude = set(list(live)[: len(live) // 2])
+    victims = policy.select_victims(k, exclude=exclude)
+    assert len(victims) == len(set(victims))
+    assert all(v in live and v not in exclude for v in victims)
+    assert len(victims) == min(k, len(live) - len(exclude))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    pendings=st.lists(st.integers(1, 30), min_size=3, max_size=60),
+    k=st.integers(1, 5),
+)
+def test_min_pending_selects_minimum(pendings, k):
+    policy = make_policy("at")
+    for v, p in enumerate(pendings):
+        policy.add(v, p)
+    victims = policy.select_victims(k)
+    chosen = sorted(pendings[v] for v in victims)
+    assert chosen == sorted(pendings)[: len(victims)]
+
+
+# -------------------------------------------------------- orchestrator
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    required=st.lists(st.integers(1, 8), min_size=2, max_size=40),
+    seed=st.integers(0, 1000),
+)
+def test_orchestrator_conservation(required, seed):
+    """Delivering exactly `required` messages in random batches completes
+    every vertex; over-delivery raises."""
+    rng = np.random.default_rng(seed)
+    orch = Orchestrator(np.array(required))
+    outstanding = {v: r for v, r in enumerate(required)}
+    chunk = 0
+    while outstanding:
+        vs = rng.choice(list(outstanding), size=min(3, len(outstanding)),
+                        replace=False)
+        counts = np.array([rng.integers(1, outstanding[v] + 1) for v in vs])
+        orch.to_hot(np.array([v for v in vs if orch.state[v] == NOT_STARTED],
+                             dtype=np.int64))
+        done = orch.deliver(vs.astype(np.int64), counts, chunk)
+        for v, c, d in zip(vs, counts, done):
+            outstanding[v] -= c
+            assert (outstanding[v] == 0) == bool(d)
+            if d:
+                orch.to_completed(np.array([v]))
+                del outstanding[v]
+        chunk += 1
+    assert orch.is_complete()
+    spans = orch.span_stats()
+    assert spans["max_span"] <= chunk
+
+
+# ------------------------------------------------------------ reorder
+
+
+@settings(max_examples=10, deadline=None)
+@given(v=st.integers(20, 300), seed=st.integers(0, 100))
+def test_relabel_preserves_degree_multiset(v, seed):
+    csr = powerlaw_graph(v, 5, seed=seed)
+    order = make_order("at", csr)
+    relabeled = relabel_graph(csr, order)
+    din0, dout0 = degrees_from_csr(csr)
+    din1, dout1 = degrees_from_csr(relabeled)
+    new_of = relabel_map(order)
+    assert np.array_equal(din1[new_of], din0)
+    assert np.array_equal(dout1[new_of], dout0)
+    assert relabeled.num_edges == csr.num_edges
+
+
+# ----------------------------------------------------- edge plan (dist)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    v=st.integers(16, 200),
+    shards=st.sampled_from([2, 4]),
+    seed=st.integers(0, 100),
+)
+def test_edge_plan_accounts_every_edge(v, shards, seed):
+    """Both plans must carry every edge exactly once (padding excluded),
+    and the combined plan's slots cover every distinct destination."""
+    csr = powerlaw_graph(v, 4, seed=seed)
+    plan = build_edge_plan(csr, shards)
+    vl = plan.v_local
+    real = plan.src_local < vl
+    assert int(real.sum()) == csr.num_edges
+    cplan = build_combined_plan(csr, shards)
+    assert cplan.reuse >= 1.0
+    real_slots = cplan.slot_dst < vl
+    # each (i, j) bucket: #slots == #distinct dst among its edges
+    for i in range(shards):
+        for j in range(shards):
+            dsts = plan.dst_local[j, i][plan.dst_local[j, i] < vl]
+            assert int(real_slots[j, i].sum()) == len(np.unique(dsts))

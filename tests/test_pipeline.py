@@ -1,0 +1,22 @@
+"""GPipe pipeline (shard_map + ppermute) == sequential oracle, fwd + grad."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("stages", [2, 4])
+def test_pipeline_matches_sequential(stages):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.pipeline_check",
+         "--devices", str(stages), "--stages", str(stages)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600,
+    )
+    assert r.returncode == 0, f"\nstdout:{r.stdout}\nstderr:{r.stderr[-2000:]}"
+    assert "OK" in r.stdout
