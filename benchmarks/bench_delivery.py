@@ -1,0 +1,216 @@
+"""Delivery-core microbenchmark: array vs python eviction bookkeeping.
+
+Measures the engine's innermost loop — ``AtlasEngine._deliver`` routing
+pre-aggregated per-chunk records through the memory manager, eviction
+policy, and orchestrator — with everything else (disk, feature I/O,
+dense transforms) stubbed out, so the number isolates the bookkeeping
+cost the array-native refactor targets.  ``--mode engine`` additionally
+times a full ``run_layer`` on a real on-disk store for an end-to-end
+view.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_delivery.py
+    PYTHONPATH=src python benchmarks/bench_delivery.py --vertices 250000 \
+        --policies at,lru --mode both
+
+Acceptance target (ISSUE 1): >= 3x delivery throughput for
+``policy_impl='array'`` over ``'python'`` at >= 100k vertices.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import orchestrator as ost
+from repro.core.atlas import AtlasConfig, AtlasEngine
+from repro.core.eviction import make_policy
+from repro.core.memory_manager import MemoryManager
+from repro.core.orchestrator import Orchestrator
+from repro.graphs.csr import degrees_from_csr
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import init_gnn_params
+from repro.storage.layout import GraphStore
+
+
+class RamColdStore:
+    """In-memory cold tier so the microbench times bookkeeping, not disk."""
+
+    def __init__(self, num_vertices: int, dim: int, dtype=np.float32):
+        self._rows = np.zeros((num_vertices, dim), dtype=dtype)
+        self.peak_resident = 0
+        self._resident = 0
+
+    def put(self, vertex_ids, rows):
+        self._rows[vertex_ids] = rows
+        self._resident += len(vertex_ids)
+        self.peak_resident = max(self.peak_resident, self._resident)
+
+    def take(self, vertex_ids):
+        self._resident -= len(vertex_ids)
+        return self._rows[vertex_ids].copy()
+
+
+class SinkGrad:
+    """Graduation stub: count rows, drop them."""
+
+    def __init__(self):
+        self.graduated = 0
+
+    def add(self, vertex_ids, rows):
+        self.graduated += len(vertex_ids)
+
+
+def build_chunks(csr, chunk_vertices: int):
+    """Per-chunk (unique destinations, message counts) from the topology."""
+    chunks = []
+    for start in range(0, csr.num_vertices, chunk_vertices):
+        end = min(start + chunk_vertices, csr.num_vertices)
+        _, dst = csr.edges_for_range(start, end)
+        u_dst, counts = np.unique(np.asarray(dst, dtype=np.int64), return_counts=True)
+        chunks.append((u_dst, counts.astype(np.int64)))
+    return chunks
+
+
+def run_micro(csr, chunks, impl: str, hot_slots: int, dim: int, seed: int):
+    in_deg, _ = degrees_from_csr(csr)
+    required = in_deg.astype(np.int64)
+    num_vertices = csr.num_vertices
+    orch = Orchestrator(required)
+    policy = make_policy(
+        "at", seed=seed, impl=impl,
+        num_vertices=num_vertices, max_pending=int(required.max()),
+    )
+    cold = RamColdStore(num_vertices, dim)
+    mm = MemoryManager(
+        num_slots=hot_slots, dim=dim, dtype=np.float32,
+        orchestrator=orch, policy=policy, cold=cold,
+    )
+    grad = SinkGrad()
+    shield = np.zeros(num_vertices, dtype=bool)
+    delivered = 0
+    reloads = 0
+    t0 = time.perf_counter()
+    for index, (u_dst, counts) in enumerate(chunks):
+        shield[u_dst] = True
+        partial = np.ones((len(u_dst), dim), dtype=np.float32)
+        reloads += AtlasEngine._deliver(
+            mm, orch, grad, u_dst, partial, counts,
+            col_offset=0, shield=shield, chunk_index=index,
+        )
+        delivered += len(u_dst)
+        shield[u_dst] = False
+    seconds = time.perf_counter() - t0
+    assert grad.graduated == int(np.sum(required > 0))
+    return {
+        "impl": impl,
+        "seconds": seconds,
+        "chunks": len(chunks),
+        "chunks_per_s": len(chunks) / seconds,
+        "delivered_vertices": delivered,
+        "vertices_per_s": delivered / seconds,
+        "evictions": mm.eviction_count,
+        "reloads": mm.reload_count,
+    }
+
+
+def run_engine(csr, feats, impl: str, hot_slots: int, chunk_vertices: int, seed: int):
+    d = feats.shape[1]
+    specs = init_gnn_params("gcn", [d, 8], seed=seed)
+    cfg = AtlasConfig(
+        chunk_bytes=chunk_vertices * d * 4,
+        hot_slots=hot_slots,
+        eviction="at",
+        policy_impl=impl,
+        seed=seed,
+    )
+    with tempfile.TemporaryDirectory() as td:
+        store = GraphStore.create(td + "/store", csr, feats, num_partitions=4)
+        t0 = time.perf_counter()
+        _, metrics = AtlasEngine(cfg).run(store, specs, td + "/work")
+        seconds = time.perf_counter() - t0
+    m = metrics[0]
+    return {
+        "impl": impl,
+        "seconds": seconds,
+        "chunks": m.chunks,
+        "chunks_per_s": m.chunks / seconds,
+        "vertices_per_s": csr.num_vertices / seconds,
+        "evictions": m.evictions,
+        "reloads": m.reloads,
+    }
+
+
+def report(title: str, results: dict) -> float:
+    py, ar = results["python"], results["array"]
+    assert py["evictions"] == ar["evictions"], "impls diverged (evictions)"
+    assert py["reloads"] == ar["reloads"], "impls diverged (reloads)"
+    speedup = py["seconds"] / ar["seconds"]
+    print(f"\n== {title} ==")
+    for r in (py, ar):
+        print(
+            f"  {r['impl']:<7} {r['seconds']:8.3f}s   "
+            f"{r['chunks_per_s']:10.1f} chunks/s   "
+            f"{r['vertices_per_s']:12.0f} vertices/s   "
+            f"evictions={r['evictions']} reloads={r['reloads']}"
+        )
+    print(f"  speedup (array over python): {speedup:.2f}x")
+    return speedup
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--vertices", type=int, default=120_000)
+    ap.add_argument("--avg-degree", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--hot-frac", type=float, default=0.125,
+                    help="hot slots as a fraction of vertices")
+    ap.add_argument("--chunk-vertices", type=int, default=4096)
+    ap.add_argument("--mode", choices=["micro", "engine", "both"], default="micro")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="repetitions per impl; best (min-time) run is reported")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true", help="emit raw results as JSON")
+    args = ap.parse_args()
+
+    hot_slots = max(16, int(args.vertices * args.hot_frac))
+    print(
+        f"graph: V={args.vertices} avg_deg={args.avg_degree} d={args.dim} "
+        f"hot_slots={hot_slots} chunk_vertices={args.chunk_vertices}"
+    )
+    csr = powerlaw_graph(args.vertices, args.avg_degree, seed=args.seed,
+                         self_loops=True)
+    all_results = {}
+    best = lambda runs: min(runs, key=lambda r: r["seconds"])
+    reps = max(1, args.repeats)
+    if args.mode in ("micro", "both"):
+        chunks = build_chunks(csr, args.chunk_vertices)
+        res = {
+            impl: best([
+                run_micro(csr, chunks, impl, hot_slots, args.dim, args.seed)
+                for _ in range(reps)
+            ])
+            for impl in ("python", "array")
+        }
+        all_results["micro"] = {**res, "speedup": report("micro (_deliver only)", res)}
+    if args.mode in ("engine", "both"):
+        feats = make_features(args.vertices, args.dim, seed=args.seed)
+        res = {
+            impl: best([
+                run_engine(csr, feats, impl, hot_slots, args.chunk_vertices,
+                           args.seed)
+                for _ in range(reps)
+            ])
+            for impl in ("python", "array")
+        }
+        all_results["engine"] = {**res, "speedup": report("engine (full run_layer)", res)}
+    if args.json:
+        print(json.dumps(all_results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

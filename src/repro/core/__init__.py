@@ -1,5 +1,13 @@
 from repro.core.atlas import AtlasConfig, AtlasEngine, LayerMetrics
-from repro.core.eviction import LRUPolicy, MinPendingPolicy, RandomPolicy, make_policy
+from repro.core.eviction import (
+    ArrayLRUPolicy,
+    ArrayMinPendingPolicy,
+    ArrayRandomPolicy,
+    LRUPolicy,
+    MinPendingPolicy,
+    RandomPolicy,
+    make_policy,
+)
 from repro.core.orchestrator import COLD, COMPLETED, HOT, NOT_STARTED, Orchestrator
 from repro.core.reorder import atlas_order, make_order, relabel_graph
 
@@ -10,6 +18,9 @@ __all__ = [
     "MinPendingPolicy",
     "LRUPolicy",
     "RandomPolicy",
+    "ArrayMinPendingPolicy",
+    "ArrayLRUPolicy",
+    "ArrayRandomPolicy",
     "make_policy",
     "Orchestrator",
     "NOT_STARTED",

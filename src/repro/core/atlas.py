@@ -30,7 +30,6 @@ from repro.core.broadcast import chunk_aggregate
 from repro.core.eviction import make_policy
 from repro.core.graduation import GraduationProcessor
 from repro.core.memory_manager import MemoryManager
-from repro.core import orchestrator as ost
 from repro.core.orchestrator import Orchestrator
 from repro.graphs.csr import degrees_from_csr
 from repro.models.gnn import (
@@ -58,6 +57,7 @@ class AtlasConfig:
     graduation_rows: int = 8192
     queue_depth: int = 20
     backend: str = "numpy"  # 'numpy' | 'jax' chunk aggregation
+    policy_impl: str = "array"  # 'array' (vectorized) | 'python' (scalar oracle)
     threaded: bool = True  # dedicated reader/writer/offload threads
     prefetch_depth: int = 4
     seed: int = 0
@@ -180,7 +180,13 @@ class AtlasEngine:
             num_vertices=num_vertices,
         )
         orch = Orchestrator(required)
-        policy = make_policy(cfg.eviction, seed=cfg.seed)
+        policy = make_policy(
+            cfg.eviction,
+            seed=cfg.seed,
+            impl=cfg.policy_impl,
+            num_vertices=num_vertices,
+            max_pending=int(required.max()),
+        )
         cold = ColdStore(
             os.path.join(out_dir, "coldstore.bin"),
             dim=spec.hot_width,
@@ -222,37 +228,50 @@ class AtlasEngine:
 
         reload_fracs: list[float] = []
         chunks = 0
-        it = reader if cfg.threaded else reader.read_serial()
-        for chunk in it:
-            chunks += 1
-            src_g = chunk.edge_src.astype(np.int64)
-            dst = chunk.edge_dst.astype(np.int64)
-            w = edge_weights(spec.kind, src_g, dst, in_deg)
-            src_local = (src_g - chunk.start_id).astype(np.int64)
-            u_dst, partial, counts = aggregate(chunk.feats, src_local, dst, w)
+        # reusable eviction shield: one bool per vertex, set/cleared per
+        # chunk in O(#destinations) — replaces the per-chunk Python set
+        shield = np.zeros(num_vertices, dtype=bool)
+        it = iter(reader) if cfg.threaded else reader.read_serial()
+        try:
+            for chunk in it:
+                chunks += 1
+                src_g = chunk.edge_src.astype(np.int64)
+                dst = chunk.edge_dst.astype(np.int64)
+                w = edge_weights(spec.kind, src_g, dst, in_deg)
+                src_local = (src_g - chunk.start_id).astype(np.int64)
+                u_dst, partial, counts = aggregate(chunk.feats, src_local, dst, w)
 
-            # eviction shield: everything receiving messages in this chunk
-            exclude = set(u_dst.tolist())
-            if spec.extra_self_message:
-                exclude.update(range(chunk.start_id, chunk.end_id))
+                # shield everything receiving messages in this chunk
+                shield[u_dst] = True
+                if spec.extra_self_message:
+                    shield[chunk.start_id : chunk.end_id] = True
 
-            n_reload = 0
-            if spec.extra_self_message:
-                ids = np.arange(chunk.start_id, chunk.end_id, dtype=np.int64)
-                self_rows = chunk.feats.astype(np.float32) * np.float32(self_coef)
-                n_reload += self._deliver(
-                    mm, orch, grad, ids, self_rows,
-                    np.ones(len(ids), dtype=np.int64),
-                    col_offset=0, exclude=exclude, chunk_index=chunk.index,
+                n_reload = 0
+                if spec.extra_self_message:
+                    ids = np.arange(chunk.start_id, chunk.end_id, dtype=np.int64)
+                    self_rows = chunk.feats.astype(np.float32) * np.float32(self_coef)
+                    n_reload += self._deliver(
+                        mm, orch, grad, ids, self_rows,
+                        np.ones(len(ids), dtype=np.int64),
+                        col_offset=0, shield=shield, chunk_index=chunk.index,
+                    )
+                if len(u_dst):
+                    n_reload += self._deliver(
+                        mm, orch, grad, u_dst, partial, counts,
+                        col_offset=agg_col, shield=shield, chunk_index=chunk.index,
+                    )
+                denom = len(u_dst) + (
+                    chunk.num_vertices if spec.extra_self_message else 0
                 )
-            if len(u_dst):
-                n_reload += self._deliver(
-                    mm, orch, grad, u_dst, partial, counts,
-                    col_offset=agg_col, exclude=exclude, chunk_index=chunk.index,
-                )
-            denom = len(u_dst) + (chunk.num_vertices if spec.extra_self_message else 0)
-            if denom:
-                reload_fracs.append(n_reload / denom)
+                if denom:
+                    reload_fracs.append(n_reload / denom)
+
+                shield[u_dst] = False
+                if spec.extra_self_message:
+                    shield[chunk.start_id : chunk.end_id] = False
+        finally:
+            # unblock the reader thread if we bail out mid-layer
+            it.close()
 
         grad.close()
         layer_spills = writer.close()
@@ -301,7 +320,7 @@ class AtlasEngine:
         partial: np.ndarray,
         counts: np.ndarray,
         col_offset: int,
-        exclude: set,
+        shield: np.ndarray,
         chunk_index: int,
     ) -> int:
         """Route one batch of pre-aggregated records to the hot store.
@@ -311,20 +330,20 @@ class AtlasEngine:
         only hard-unevicatable set, so a sub-batch that fits the hot store
         can always be placed (earlier sub-batches become eviction fodder —
         they will reload, which is exactly the paper's churn the min-pending
-        policy then minimises).  Returns the number of COLD->HOT reloads.
+        policy then minimises).  ``shield`` is the chunk's soft eviction
+        shield as a boolean mask over vertex ids.  Each sub-batch costs one
+        activate, one accumulate, one orchestrator deliver, and one batched
+        policy update.  Returns the number of COLD->HOT reloads.
         """
-        reloads = 0
+        reloads_before = mm.reload_count
         cap = max(1, mm.num_slots)
         for s in range(0, len(vertices), cap):
             vs = vertices[s : s + cap]
             ps = partial[s : s + cap]
             cs = counts[s : s + cap]
-            reloads += int(np.sum(orch.state[vs] == ost.COLD))
-            mm.activate(vs, exclude)
-            old_pending = orch.pending(vs)
-            mm.accumulate(vs, ps, col_offset)
-            done_mask = orch.deliver(vs, cs, chunk_index)
-            new_pending = old_pending - cs
+            slots = mm.activate(vs, shield)
+            mm.accumulate(vs, ps, col_offset, slots=slots)
+            done_mask, old_pending, new_pending = orch.deliver(vs, cs, chunk_index)
             live = ~done_mask
             if np.any(live):
                 mm.update_policy_scores(vs[live], old_pending[live], new_pending[live])
@@ -332,7 +351,7 @@ class AtlasEngine:
                 done = vs[done_mask]
                 rows = mm.release(done)
                 grad.add(done, rows)
-        return reloads
+        return mm.reload_count - reloads_before
 
 
 # --------------------------------------------------------------------------

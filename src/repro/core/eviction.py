@@ -4,14 +4,30 @@ ATLAS's policy is *minimum-pending-messages*: evict the vertices with the
 fewest messages still outstanding — they are closest to completion, so the
 next reload is likely their last, minimising evict→reload churn.
 
-Implemented as a bucket min-structure: pending counts are small bounded
-integers ([0, max_in_degree]), so vertices live in score-indexed buckets
-with O(1) insert / remove / decrement and O(k) selection by scanning the
-smallest non-empty buckets (paper uses doubly-linked-list buckets; a
-hashed-set bucket has the identical complexity profile and is simpler to
-keep correct).
+Two implementations live side by side behind the same interface:
 
-LRU and Random are the ablation baselines (Fig 7).
+* ``python`` — the original scalar structures (``OrderedDict`` buckets,
+  swap-remove lists).  Kept as the correctness oracle and for the
+  ablation harness.
+* ``array`` — NumPy intrusive doubly-linked bucket lists keyed by pending
+  count: ``nxt``/``prv``/``score`` arrays over the vertex id space, with
+  per-score ``head``/``tail``/``count`` arrays.  All bookkeeping is done
+  with batch operations (``add_many`` / ``update_many`` / ``remove_many``)
+  so the engine's per-chunk policy maintenance is a handful of NumPy calls
+  instead of O(#destinations) Python dict operations.  Batch detach from
+  the linked lists handles adjacent victims by pairing run starts with run
+  ends via one lexsort over (bucket, append-seq) — no pointer chasing —
+  and batch append splices one pre-linked chain per distinct score.
+
+Both implementations produce *identical victim sets* for identical
+operation sequences (within-bucket FIFO order is preserved exactly), which
+tests/test_delivery_core.py asserts.  LRU and Random are the ablation
+baselines (Fig 7).
+
+``select_victims`` accepts the eviction shield as a Python set, a boolean
+mask over vertex ids, or a tuple of such masks (hard shield, chunk
+shield) — masks are what the batch delivery path passes so no per-chunk
+sets are ever materialised.
 """
 
 from __future__ import annotations
@@ -20,9 +36,54 @@ from collections import OrderedDict
 
 import numpy as np
 
+NIL = -1
+
+
+# --------------------------------------------------------------------------
+# Exclusion-shield normalisation: set | bool-mask | tuple of either
+# --------------------------------------------------------------------------
+
+
+def _scalar_contains(exclude):
+    """Per-vertex membership test for the scalar (python) policies."""
+    if exclude is None:
+        return lambda v: False
+    if isinstance(exclude, np.ndarray):
+        return lambda v: bool(exclude[v])
+    if isinstance(exclude, tuple):
+        tests = [_scalar_contains(e) for e in exclude]
+        return lambda v: any(t(v) for t in tests)
+    return lambda v: v in exclude  # set / dict-keys
+
+
+def _excluded_mask(exclude, members: np.ndarray) -> np.ndarray:
+    """Vectorised membership test: which of `members` are shielded."""
+    if exclude is None:
+        return np.zeros(len(members), dtype=bool)
+    if isinstance(exclude, np.ndarray):
+        return exclude[members]
+    if isinstance(exclude, tuple):
+        m = _excluded_mask(exclude[0], members)
+        for e in exclude[1:]:
+            m |= _excluded_mask(e, members)
+        return m
+    return np.fromiter(
+        (v in exclude for v in members.tolist()), dtype=bool, count=len(members)
+    )
+
+
+# --------------------------------------------------------------------------
+# Interface
+# --------------------------------------------------------------------------
+
 
 class EvictionPolicy:
-    """Tracks the set of HOT vertices and picks eviction victims."""
+    """Tracks the set of HOT vertices and picks eviction victims.
+
+    Scalar methods are the original interface; the ``*_many`` batch
+    methods default to scalar loops so existing policies keep working,
+    while array policies override them with vectorised versions.
+    """
 
     def add(self, vertex: int, pending: int) -> None:
         raise NotImplementedError
@@ -34,11 +95,34 @@ class EvictionPolicy:
         """Called when messages arrive for a HOT vertex."""
         raise NotImplementedError
 
-    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
+    def select_victims(self, k: int, exclude=None):
+        """Return up to k victims; `exclude` is a set, bool mask, or tuple."""
         raise NotImplementedError
 
     def __len__(self) -> int:
         raise NotImplementedError
+
+    # ------------------------------------------------------------ batch
+    def add_many(self, vertices: np.ndarray, pendings: np.ndarray) -> None:
+        for v, p in zip(vertices.tolist(), pendings.tolist()):
+            self.add(int(v), int(p))
+
+    def remove_many(self, vertices: np.ndarray) -> None:
+        for v in vertices.tolist():
+            self.remove(int(v))
+
+    def update_many(
+        self, vertices: np.ndarray, old_pending: np.ndarray, new_pending: np.ndarray
+    ) -> None:
+        for v, o, nw in zip(
+            vertices.tolist(), old_pending.tolist(), new_pending.tolist()
+        ):
+            self.update(int(v), int(o), int(nw))
+
+
+# --------------------------------------------------------------------------
+# Scalar (python) implementations — the correctness oracle
+# --------------------------------------------------------------------------
 
 
 class MinPendingPolicy(EvictionPolicy):
@@ -73,19 +157,19 @@ class MinPendingPolicy(EvictionPolicy):
         if new_pending < self._min_score:
             self._min_score = new_pending
 
-    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
+    def select_victims(self, k: int, exclude=None) -> list[int]:
         """Scan smallest non-empty buckets upward: O(k + #empty-scans)."""
         victims: list[int] = []
         if not self._score:
             return victims
-        exclude = exclude or set()
+        contains = _scalar_contains(exclude)
         score = self._min_score
         max_score = max(self._buckets) if self._buckets else 0
         while len(victims) < k and score <= max_score:
             bucket = self._buckets.get(score)
             if bucket:
                 for v in bucket:
-                    if v not in exclude:
+                    if not contains(v):
                         victims.append(v)
                         if len(victims) >= k:
                             break
@@ -119,11 +203,11 @@ class LRUPolicy(EvictionPolicy):
     def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
         self._order.move_to_end(vertex)  # touched = most recently used
 
-    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
-        exclude = exclude or set()
+    def select_victims(self, k: int, exclude=None) -> list[int]:
+        contains = _scalar_contains(exclude)
         victims = []
         for v in self._order:  # oldest first
-            if v not in exclude:
+            if not contains(v):
                 victims.append(v)
                 if len(victims) >= k:
                     break
@@ -155,9 +239,9 @@ class RandomPolicy(EvictionPolicy):
     def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
         pass
 
-    def select_victims(self, k: int, exclude: set[int] | None = None) -> list[int]:
-        exclude = exclude or set()
-        pool = [v for v in self._list if v not in exclude]
+    def select_victims(self, k: int, exclude=None) -> list[int]:
+        contains = _scalar_contains(exclude)
+        pool = [v for v in self._list if not contains(v)]
         if len(pool) <= k:
             return pool
         idx = self._rng.choice(len(pool), size=k, replace=False)
@@ -167,12 +251,319 @@ class RandomPolicy(EvictionPolicy):
         return len(self._list)
 
 
-def make_policy(name: str, seed: int = 0) -> EvictionPolicy:
+# --------------------------------------------------------------------------
+# Array-native implementations — the delivery hot path
+# --------------------------------------------------------------------------
+
+
+class ArrayMinPendingPolicy(EvictionPolicy):
+    """Min-pending buckets as NumPy intrusive doubly-linked lists.
+
+    Vertex v is a list node: ``nxt[v]``/``prv[v]`` link it within the
+    bucket for its pending count ``score[v]`` (NIL = not tracked).  New and
+    updated vertices append at the bucket tail, selection walks buckets
+    from the smallest score and each bucket head-first — exactly the FIFO
+    order of the ``OrderedDict`` oracle, so victim sets match bit-for-bit.
+    """
+
+    def __init__(self, num_vertices: int, max_pending: int | None = None):
+        v = int(num_vertices)
+        self._nxt = np.full(v, NIL, dtype=np.int64)
+        self._prv = np.full(v, NIL, dtype=np.int64)
+        self._score = np.full(v, NIL, dtype=np.int64)
+        self._pos = np.full(v, NIL, dtype=np.int64)  # batch-detach scratch
+        # append timestamp: within a bucket, list order == ascending seq
+        # (every insertion is a tail append), which lets batch detach match
+        # run starts to run ends with one lexsort instead of pointer chasing
+        self._seq = np.zeros(v, dtype=np.int64)
+        self._seq_counter = 0
+        cap = int(max_pending) + 1 if max_pending is not None else 64
+        cap = max(cap, 1)
+        self._head = np.full(cap, NIL, dtype=np.int64)
+        self._tail = np.full(cap, NIL, dtype=np.int64)
+        self._count = np.zeros(cap, dtype=np.int64)
+        self._size = 0
+        self._min_lb = 0  # lower bound on the smallest live score
+
+    # --------------------------------------------------------- capacity
+    def _ensure_score_capacity(self, smax: int) -> None:
+        cap = len(self._head)
+        if smax < cap:
+            return
+        new = max(cap * 2, smax + 1)
+        pad = new - cap
+        self._head = np.concatenate([self._head, np.full(pad, NIL, np.int64)])
+        self._tail = np.concatenate([self._tail, np.full(pad, NIL, np.int64)])
+        self._count = np.concatenate([self._count, np.zeros(pad, np.int64)])
+
+    # ------------------------------------------------------------ splice
+    def _append(self, vs: np.ndarray, scores: np.ndarray) -> None:
+        """Append each vertex at the tail of its score's bucket, preserving
+        batch order within equal scores (== sequential oracle order)."""
+        order = np.argsort(scores, kind="stable")
+        sv = vs[order]
+        sc = scores[order]
+        nxt, prv = self._nxt, self._prv
+        nxt[sv] = NIL
+        same = sc[1:] == sc[:-1]  # chain up each equal-score group
+        nxt[sv[:-1][same]] = sv[1:][same]
+        prv[sv[1:][same]] = sv[:-1][same]
+        first = np.flatnonzero(np.r_[True, ~same])
+        last = np.r_[first[1:] - 1, len(sv) - 1]
+        heads, tails, buckets = sv[first], sv[last], sc[first]
+        old_tail = self._tail[buckets]
+        empty = old_tail < 0
+        self._head[buckets[empty]] = heads[empty]
+        nxt[old_tail[~empty]] = heads[~empty]
+        prv[heads] = old_tail
+        self._tail[buckets] = tails
+        self._count[buckets] += last - first + 1
+        self._score[vs] = scores
+        self._seq[sv] = self._seq_counter + np.arange(len(sv), dtype=np.int64)
+        self._seq_counter += len(sv)
+        lo = int(sc[0])
+        self._min_lb = lo if self._size == 0 else min(self._min_lb, lo)
+        self._size += len(vs)
+
+    def _detach(self, vs: np.ndarray) -> None:
+        """Unlink a batch (possibly containing adjacent nodes) from its
+        buckets in O(batch log batch) with no pointer chasing.
+
+        The batch decomposes into maximal runs of list-adjacent nodes.  A
+        run start is a node whose predecessor is outside the batch, a run
+        end one whose successor is; within a bucket, list order equals
+        ascending ``seq`` order, so sorting starts and ends by
+        (bucket, seq) pairs the i-th start with the i-th end, and each
+        run's outside neighbours are spliced together in one pass."""
+        nxt, prv, score, pos = self._nxt, self._prv, self._score, self._pos
+        pos[vs] = np.arange(len(vs), dtype=np.int64)
+        pred = prv[vs]
+        succ = nxt[vs]
+        pred_in = pred >= 0
+        pred_in[pred_in] = pos[pred[pred_in]] >= 0
+        succ_in = succ >= 0
+        succ_in[succ_in] = pos[succ[succ_in]] >= 0
+        starts = vs[~pred_in]
+        ends = vs[~succ_in]
+        # order runs by (bucket, seq); seq is globally unique so a single
+        # argsort on the combined key replaces a two-key lexsort
+        seq = self._seq
+        starts = starts[np.argsort(score[starts] * self._seq_counter + seq[starts])]
+        ends = ends[np.argsort(score[ends] * self._seq_counter + seq[ends])]
+        left = prv[starts]  # outside predecessor (or NIL)
+        right = nxt[ends]  # outside successor (or NIL)
+        bucket = score[starts]
+        headless = left < 0
+        self._head[bucket[headless]] = right[headless]
+        nxt[left[~headless]] = right[~headless]
+        tailless = right < 0
+        self._tail[bucket[tailless]] = left[tailless]
+        prv[right[~tailless]] = left[~tailless]
+        removed = np.bincount(score[vs])  # length = max batch score + 1
+        self._count[: len(removed)] -= removed
+        pos[vs] = NIL
+        self._size -= len(vs)
+
+    # ------------------------------------------------------------- batch
+    def _scores_for(self, vs: np.ndarray, pendings: np.ndarray) -> np.ndarray:
+        return np.asarray(pendings, dtype=np.int64)
+
+    def add_many(self, vertices: np.ndarray, pendings: np.ndarray) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        if not len(vs):
+            return
+        scores = self._scores_for(vs, pendings)
+        self._ensure_score_capacity(int(scores.max()))
+        self._append(vs, scores)
+
+    def remove_many(self, vertices: np.ndarray) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        if not len(vs):
+            return
+        if np.any(self._score[vs] < 0):
+            bad = vs[self._score[vs] < 0][0]
+            raise KeyError(f"vertex {int(bad)} not tracked by policy")
+        self._detach(vs)
+        self._score[vs] = NIL
+
+    def update_many(
+        self, vertices: np.ndarray, old_pending: np.ndarray, new_pending: np.ndarray
+    ) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        if not len(vs):
+            return
+        scores = self._scores_for(vs, new_pending)
+        self._detach(vs)
+        self._ensure_score_capacity(int(scores.max()))
+        self._append(vs, scores)
+
+    # ------------------------------------------------------------ scalar
+    def add(self, vertex: int, pending: int) -> None:
+        self.add_many(np.array([vertex]), np.array([pending]))
+
+    def remove(self, vertex: int) -> None:
+        self.remove_many(np.array([vertex]))
+
+    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
+        self.update_many(
+            np.array([vertex]), np.array([old_pending]), np.array([new_pending])
+        )
+
+    # --------------------------------------------------------- selection
+    def select_victims(self, k: int, exclude=None) -> np.ndarray:
+        if self._size == 0:
+            return np.empty(0, dtype=np.int64)
+        base = self._min_lb
+        live_scores = base + np.flatnonzero(self._count[base:])
+        if len(live_scores):  # repair the lower bound while we have it
+            self._min_lb = int(live_scores[0])
+        picked: list[np.ndarray] = []
+        need = k
+        item = self._nxt.item  # scalar reads ~2x faster than fancy indexing
+        for score in live_scores:
+            # walk the bucket head-first in blocks sized to the remaining
+            # need, filtering the shield vectorised per block, so a large
+            # bucket is never fully materialised for a small deficit
+            remaining = int(self._count[score])
+            v = self._head.item(int(score))
+            while remaining and need > 0:
+                block = min(remaining, max(2 * need, 64))
+                buf = []
+                append = buf.append
+                for _ in range(block):
+                    append(v)
+                    v = item(v)
+                remaining -= block
+                members = np.array(buf, dtype=np.int64)
+                keep = members[~_excluded_mask(exclude, members)]
+                if len(keep):
+                    picked.append(keep[:need])
+                    need -= len(picked[-1])
+            if need <= 0:
+                break
+        if not picked:
+            return np.empty(0, dtype=np.int64)
+        return np.concatenate(picked)
+
+    def __len__(self) -> int:
+        return self._size
+
+
+class ArrayLRUPolicy(ArrayMinPendingPolicy):
+    """LRU as a single bucket of the intrusive list: append = touch,
+    selection walks head-first = oldest-first."""
+
+    def __init__(self, num_vertices: int):
+        super().__init__(num_vertices, max_pending=0)
+
+    def _scores_for(self, vs: np.ndarray, pendings: np.ndarray) -> np.ndarray:
+        return np.zeros(len(vs), dtype=np.int64)
+
+    def update_many(
+        self, vertices: np.ndarray, old_pending: np.ndarray, new_pending: np.ndarray
+    ) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        if not len(vs):
+            return
+        self._detach(vs)  # move-to-end == detach + re-append
+        self._append(vs, np.zeros(len(vs), dtype=np.int64))
+
+
+class ArrayRandomPolicy(EvictionPolicy):
+    """Random ablation over a dense member array.
+
+    Removal replays the oracle's sequential swap-remove so the member
+    order — and therefore the rng-driven victim choice — matches the
+    scalar ``RandomPolicy`` exactly for the same seed.
+    """
+
+    def __init__(self, num_vertices: int, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+        self._members = np.empty(int(num_vertices), dtype=np.int64)
+        self._pos = np.full(int(num_vertices), NIL, dtype=np.int64)
+        self._n = 0
+
+    def add_many(self, vertices: np.ndarray, pendings: np.ndarray) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        n = len(vs)
+        self._members[self._n : self._n + n] = vs
+        self._pos[vs] = np.arange(self._n, self._n + n, dtype=np.int64)
+        self._n += n
+
+    def remove_many(self, vertices: np.ndarray) -> None:
+        members, pos = self._members, self._pos
+        for v in np.asarray(vertices, dtype=np.int64).tolist():
+            i = pos[v]
+            if i < 0:
+                raise KeyError(f"vertex {v} not tracked by policy")
+            pos[v] = NIL
+            self._n -= 1
+            last = members[self._n]
+            if last != v:
+                members[i] = last
+                pos[last] = i
+
+    def update_many(self, vertices, old_pending, new_pending) -> None:
+        pass
+
+    def add(self, vertex: int, pending: int) -> None:
+        self.add_many(np.array([vertex]), np.array([pending]))
+
+    def remove(self, vertex: int) -> None:
+        self.remove_many(np.array([vertex]))
+
+    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
+        pass
+
+    def select_victims(self, k: int, exclude=None) -> np.ndarray:
+        pool = self._members[: self._n]
+        pool = pool[~_excluded_mask(exclude, pool)]
+        if len(pool) <= k:
+            return pool.copy()
+        idx = self._rng.choice(len(pool), size=k, replace=False)
+        return pool[idx]
+
+    def __len__(self) -> int:
+        return self._n
+
+
+# --------------------------------------------------------------------------
+# Factory
+# --------------------------------------------------------------------------
+
+
+def make_policy(
+    name: str,
+    seed: int = 0,
+    impl: str = "python",
+    num_vertices: int | None = None,
+    max_pending: int | None = None,
+) -> EvictionPolicy:
     name = name.lower()
+    impl = impl.lower()
     if name in ("at", "min_pending", "minpending", "atlas"):
-        return MinPendingPolicy()
-    if name == "lru":
-        return LRUPolicy()
-    if name in ("rnd", "random"):
-        return RandomPolicy(seed)
-    raise ValueError(f"unknown eviction policy {name!r}")
+        if impl == "python":
+            return MinPendingPolicy()
+        if impl == "array":
+            _require_num_vertices(num_vertices)
+            return ArrayMinPendingPolicy(num_vertices, max_pending=max_pending)
+    elif name == "lru":
+        if impl == "python":
+            return LRUPolicy()
+        if impl == "array":
+            _require_num_vertices(num_vertices)
+            return ArrayLRUPolicy(num_vertices)
+    elif name in ("rnd", "random"):
+        if impl == "python":
+            return RandomPolicy(seed)
+        if impl == "array":
+            _require_num_vertices(num_vertices)
+            return ArrayRandomPolicy(num_vertices, seed=seed)
+    else:
+        raise ValueError(f"unknown eviction policy {name!r}")
+    raise ValueError(f"unknown policy impl {impl!r} (expected 'array' or 'python')")
+
+
+def _require_num_vertices(num_vertices: int | None) -> None:
+    if num_vertices is None:
+        raise ValueError("array policies need num_vertices at construction")

@@ -45,7 +45,11 @@ class Orchestrator:
 
     # ------------------------------------------------------- transitions
     def _check(self, vertices: np.ndarray, allowed: tuple) -> None:
-        bad = ~np.isin(self.state[vertices], allowed)
+        s = self.state[vertices]
+        ok = s == allowed[0]
+        for a in allowed[1:]:
+            ok |= s == a
+        bad = ~ok
         if np.any(bad):
             v = np.asarray(vertices)[bad][0]
             raise RuntimeError(
@@ -68,22 +72,28 @@ class Orchestrator:
     # ---------------------------------------------------------- delivery
     def deliver(
         self, vertices: np.ndarray, counts: np.ndarray, chunk_index: int
-    ) -> np.ndarray:
-        """Record `counts` messages delivered to `vertices`; returns the
-        boolean mask of vertices that are now fully aggregated."""
-        self.received[vertices] += counts
-        over = self.received[vertices] > self.required[vertices]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Record `counts` messages delivered to `vertices`.
+
+        Returns ``(done_mask, old_pending, new_pending)`` in one call so
+        the delivery loop can make a single batched eviction-policy update
+        without re-querying pending counts before and after."""
+        req = self.required[vertices]
+        old_received = self.received[vertices]
+        new_received = old_received + counts
+        over = new_received > req
         if np.any(over):
             v = np.asarray(vertices)[over][0]
             raise RuntimeError(
-                f"vertex {v} received {self.received[v]} > required "
-                f"{self.required[v]} messages"
+                f"vertex {v} received {int(self.received[v] + counts[over][0])} "
+                f"> required {self.required[v]} messages"
             )
+        self.received[vertices] = new_received
         first = self.first_touch[vertices] < 0
         if np.any(first):
             self.first_touch[np.asarray(vertices)[first]] = chunk_index
         self.last_touch[vertices] = chunk_index
-        return self.received[vertices] == self.required[vertices]
+        return new_received == req, req - old_received, req - new_received
 
     # ------------------------------------------------------------ stats
     def span_stats(self) -> dict:

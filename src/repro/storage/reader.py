@@ -107,43 +107,70 @@ class ChunkReader:
             edge_dst=np.asarray(dst),
         )
 
+    def _read_chunk_with_retry(self, index: int, start: int, end: int) -> Chunk:
+        """Deterministic chunk retry (straggler/transient-I/O mitigation):
+        a chunk read is pure, so re-issuing it is always safe.  Only
+        ``OSError`` is retried — anything else (or a persistent ``OSError``)
+        re-raises the original error directly."""
+        for attempt in range(self.read_retries + 1):
+            try:
+                return self._read_chunk(index, start, end)
+            except OSError:
+                if attempt == self.read_retries:
+                    raise
+                self.retried_chunks += 1
+        raise AssertionError("unreachable: retry loop always returns or raises")
+
     # ------------------------------------------------------------- iterate
     def __iter__(self):
-        """Prefetching iterator: dedicated reader thread + bounded queue."""
+        """Prefetching iterator: dedicated reader thread + bounded queue.
+
+        The stop event lets an abandoning consumer (exception mid-layer,
+        generator ``close()``) unblock the worker's ``put`` on the bounded
+        queue — without it the reader thread leaks, parked forever on a
+        full queue.
+        """
         q: queue.Queue = queue.Queue(maxsize=self.prefetch_depth)
         ranges = self.chunk_ranges()
         error: list[BaseException] = []
+        stop = threading.Event()
+
+        def put_checked(item) -> bool:
+            """Put unless the consumer has gone away; True on success."""
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
             try:
                 for i, (s, e) in enumerate(ranges):
-                    # deterministic chunk retry (straggler/transient-I/O
-                    # mitigation): a chunk read is pure, so re-issuing it
-                    # is always safe; persistent failures propagate.
-                    for attempt in range(self.read_retries + 1):
-                        try:
-                            chunk = self._read_chunk(i, s, e)
-                            break
-                        except OSError:
-                            if attempt == self.read_retries:
-                                raise
-                            self.retried_chunks += 1
-                    q.put(chunk)
+                    if stop.is_set():
+                        return
+                    if not put_checked(self._read_chunk_with_retry(i, s, e)):
+                        return
             except BaseException as exc:  # propagate to consumer
                 error.append(exc)
             finally:
-                q.put(None)
+                put_checked(None)
 
         t = threading.Thread(target=worker, name="atlas-reader", daemon=True)
         t.start()
-        while True:
-            item = q.get()
-            if item is None:
-                break
-            yield item
-        t.join()
-        if error:
-            raise error[0]
+        try:
+            while True:
+                item = q.get()
+                if item is None:
+                    break
+                yield item
+            t.join()
+            if error:
+                raise error[0]
+        finally:
+            stop.set()
+            t.join(timeout=5.0)
 
     def read_serial(self):
         """Non-threaded variant (deterministic single-thread debugging)."""

@@ -1,0 +1,230 @@
+"""Array-native delivery core: equivalence against the scalar oracle.
+
+The ``array`` eviction policies must be *behaviourally identical* to the
+``python`` ones — same victim choices, hence same evict/reload traces and
+bit-identical engine output — so the scalar implementations can serve as
+a correctness oracle for the vectorized hot path.  Also covers the
+ChunkReader hardening (thread leak on abandoned iteration, retry-loop
+error propagation).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.core.eviction import make_policy
+from repro.core.gather_ref import layerwise_gather
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import dense_reference, init_gnn_params
+from repro.storage.iostats import IOStats
+from repro.storage.reader import ChunkReader
+from repro.storage.spill import SpillSet, write_spill
+
+from tests.conftest import build_store
+
+POLICIES = ["at", "lru", "rnd"]
+
+
+# --------------------------------------------------------------------------
+# Property-style policy equivalence: identical op sequences, identical victims
+# --------------------------------------------------------------------------
+
+
+def _mask_of(vertices, num_vertices):
+    m = np.zeros(num_vertices, dtype=bool)
+    m[list(vertices)] = True
+    return m
+
+
+@pytest.mark.parametrize("policy_name", POLICIES)
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_policy_equivalence_randomized(policy_name, seed):
+    """Drive the scalar and array policies through the same randomized
+    add/update/remove/select sequence; victim lists must match exactly.
+    The python policy gets set shields, the array one boolean masks, so
+    the shield representations are cross-checked too."""
+    num_vertices = 400
+    rng = np.random.default_rng(seed)
+    py = make_policy(policy_name, seed=seed, impl="python")
+    ar = make_policy(
+        policy_name, seed=seed, impl="array", num_vertices=num_vertices
+    )
+    live: dict[int, int] = {}
+    for step in range(300):
+        op = rng.integers(0, 4)
+        if op == 0 or not live:  # add a batch of new vertices
+            fresh = [
+                int(v)
+                for v in rng.choice(num_vertices, size=rng.integers(1, 20))
+                if int(v) not in live
+            ]
+            fresh = list(dict.fromkeys(fresh))
+            pend = rng.integers(1, 30, size=len(fresh))
+            for v, p in zip(fresh, pend):
+                live[v] = int(p)
+            py.add_many(np.array(fresh, dtype=np.int64), pend)
+            ar.add_many(np.array(fresh, dtype=np.int64), pend)
+        elif op == 1:  # batched decrement (message arrival)
+            vs = rng.choice(list(live), size=min(len(live), 8), replace=False)
+            vs = np.array([v for v in vs if live[int(v)] > 1], dtype=np.int64)
+            if not len(vs):
+                continue
+            old = np.array([live[int(v)] for v in vs])
+            new = np.array([int(rng.integers(1, live[int(v)] + 1)) for v in vs])
+            for v, n in zip(vs, new):
+                live[int(v)] = int(n)
+            py.update_many(vs, old, new)
+            ar.update_many(vs, old, new)
+        elif op == 2:  # batched removal (graduation)
+            vs = rng.choice(list(live), size=min(len(live), 6), replace=False)
+            vs = np.asarray(vs, dtype=np.int64)
+            for v in vs:
+                del live[int(v)]
+            py.remove_many(vs)
+            ar.remove_many(vs)
+        else:  # selection (+ eviction of the victims)
+            k = int(rng.integers(1, 12))
+            n_excl = int(rng.integers(0, max(1, len(live))))
+            excl = {int(v) for v in rng.choice(list(live), size=n_excl, replace=False)}
+            v_py = list(py.select_victims(k, exclude=excl))
+            v_ar = list(ar.select_victims(k, exclude=_mask_of(excl, num_vertices)))
+            assert v_py == v_ar, f"step {step}: victim mismatch"
+            for v in v_py:
+                del live[int(v)]
+            if v_py:
+                py.remove_many(np.array(v_py, dtype=np.int64))
+                ar.remove_many(np.array(v_py, dtype=np.int64))
+        assert len(py) == len(ar) == len(live)
+    # final full drain must agree as well
+    drain_py = list(py.select_victims(len(live) + 5))
+    drain_ar = list(ar.select_victims(len(live) + 5))
+    assert drain_py == drain_ar
+    assert set(drain_py) == set(live)
+
+
+def test_array_min_pending_orders_by_pending():
+    policy = make_policy("at", impl="array", num_vertices=64)
+    pend = [9, 2, 7, 2, 5, 1]
+    policy.add_many(np.arange(6), np.array(pend))
+    victims = list(policy.select_victims(3))
+    assert sorted(pend[v] for v in victims) == sorted(pend)[:3]
+    assert victims[0] == 5  # pending 1 is the unique minimum
+
+
+# --------------------------------------------------------------------------
+# End-to-end: engine under 'array' == 'python' oracle == gather references
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_engine_policy_impl_equivalence(tmp_path, policy):
+    v, d_in, d_out = 900, 16, 8
+    csr = powerlaw_graph(v, 6, seed=5)
+    feats = make_features(v, d_in, seed=5)
+    specs = init_gnn_params("gcn", [d_in, d_out], seed=9)
+    dense = dense_reference(csr, feats, specs)
+    gather, _ = layerwise_gather(csr, feats, specs)
+    runs = {}
+    for impl in ("python", "array"):
+        cfg = AtlasConfig(
+            chunk_bytes=48 * d_in * 4,
+            hot_slots=v // 8,  # force heavy eviction
+            eviction=policy,
+            policy_impl=impl,
+        )
+        store = build_store(tmp_path / impl / policy, csr, feats)
+        spills, metrics = AtlasEngine(cfg).run(
+            store, specs, str(tmp_path / impl / policy / "work")
+        )
+        out = spills_to_dense(spills, v, d_out)
+        runs[impl] = (out, metrics[0])
+    out_a, m_a = runs["array"]
+    out_p, m_p = runs["python"]
+    assert m_a.evictions > 0, "test must actually exercise eviction"
+    assert m_a.evictions == m_p.evictions
+    assert m_a.reloads == m_p.reloads
+    assert np.array_equal(out_a, out_p), "impls must be bit-identical"
+    assert np.allclose(out_a, gather, atol=1e-4)
+    assert np.abs(out_a - dense).max() < 1e-4
+
+
+# --------------------------------------------------------------------------
+# ChunkReader hardening
+# --------------------------------------------------------------------------
+
+
+def _make_reader(tmp_path, v=256, d=8):
+    csr = powerlaw_graph(v, 4, seed=3, self_loops=True)
+    feats = make_features(v, d, seed=3)
+    spills = SpillSet()
+    spills.add(
+        write_spill(
+            str(tmp_path / "l0.spill"), np.arange(v, dtype=np.uint64), feats
+        )
+    )
+    return ChunkReader(
+        csr,
+        spills,
+        feat_dim=d,
+        feat_dtype=np.float32,
+        chunk_bytes=16 * d * 4,  # many small chunks
+        stats=IOStats(),
+        prefetch_depth=2,
+        num_vertices=v,
+    )
+
+
+def test_reader_abandoned_iteration_stops_thread(tmp_path):
+    """Abandoning the prefetching iterator mid-stream must unblock and
+    stop the reader thread (it used to park forever on a full queue)."""
+    reader = _make_reader(tmp_path)
+    assert reader.num_chunks() > 6
+    it = iter(reader)
+    next(it)
+    next(it)
+    before = {t.name for t in threading.enumerate()}
+    assert any("atlas-reader" in n for n in before)
+    it.close()  # what run_layer's finally does on a mid-layer exception
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        alive = [
+            t for t in threading.enumerate() if "atlas-reader" in t.name and t.is_alive()
+        ]
+        if not alive:
+            break
+        time.sleep(0.02)
+    assert not alive, "reader thread still running after generator close"
+
+
+def test_reader_nonoserror_propagates_directly(tmp_path):
+    """A non-OSError during a chunk read must surface as-is, not as a
+    confusing UnboundLocalError from the retry loop."""
+    reader = _make_reader(tmp_path)
+
+    def boom(index, start, end):
+        raise ValueError("corrupt chunk payload")
+
+    reader._read_chunk = boom
+    with pytest.raises(ValueError, match="corrupt chunk payload"):
+        list(iter(reader))
+    assert reader.retried_chunks == 0
+
+
+def test_reader_retries_transient_oserror(tmp_path):
+    reader = _make_reader(tmp_path)
+    real = reader._read_chunk
+    fails = {"left": 2}
+
+    def flaky(index, start, end):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise OSError("transient")
+        return real(index, start, end)
+
+    reader._read_chunk = flaky
+    chunks = list(iter(reader))
+    assert len(chunks) == reader.num_chunks()
+    assert reader.retried_chunks == 2

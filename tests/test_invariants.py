@@ -6,6 +6,9 @@ rules' divisibility guarantees, and the reorder round-trip.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.eviction import make_policy
@@ -89,7 +92,8 @@ def test_orchestrator_conservation(required, seed):
         counts = np.array([rng.integers(1, outstanding[v] + 1) for v in vs])
         orch.to_hot(np.array([v for v in vs if orch.state[v] == NOT_STARTED],
                              dtype=np.int64))
-        done = orch.deliver(vs.astype(np.int64), counts, chunk)
+        done, old_p, new_p = orch.deliver(vs.astype(np.int64), counts, chunk)
+        assert np.array_equal(old_p - new_p, counts)
         for v, c, d in zip(vs, counts, done):
             outstanding[v] -= c
             assert (outstanding[v] == 0) == bool(d)

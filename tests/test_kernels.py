@@ -9,6 +9,8 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.edge_block_spmm import edge_block_spmm
