@@ -118,7 +118,15 @@ def run_micro(csr, chunks, impl: str, hot_slots: int, dim: int, seed: int):
     }
 
 
-def run_engine(csr, feats, impl: str, hot_slots: int, chunk_vertices: int, seed: int):
+def run_engine(
+    csr,
+    feats,
+    impl: str,
+    hot_slots: int,
+    chunk_vertices: int,
+    seed: int,
+    backend: str = "numpy",
+):
     d = feats.shape[1]
     specs = init_gnn_params("gcn", [d, 8], seed=seed)
     cfg = AtlasConfig(
@@ -126,6 +134,7 @@ def run_engine(csr, feats, impl: str, hot_slots: int, chunk_vertices: int, seed:
         hot_slots=hot_slots,
         eviction="at",
         policy_impl=impl,
+        backend=backend,
         seed=seed,
     )
     with tempfile.TemporaryDirectory() as td:
@@ -136,6 +145,7 @@ def run_engine(csr, feats, impl: str, hot_slots: int, chunk_vertices: int, seed:
     m = metrics[0]
     return {
         "impl": impl,
+        "backend": backend,
         "seconds": seconds,
         "chunks": m.chunks,
         "chunks_per_s": m.chunks / seconds,
@@ -170,7 +180,10 @@ def main():
     ap.add_argument("--hot-frac", type=float, default=0.125,
                     help="hot slots as a fraction of vertices")
     ap.add_argument("--chunk-vertices", type=int, default=4096)
-    ap.add_argument("--mode", choices=["micro", "engine", "both"], default="micro")
+    ap.add_argument("--mode", choices=["micro", "engine", "both", "backend"],
+                    default="micro")
+    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"],
+                    help="chunk-aggregation backend for --mode engine runs")
     ap.add_argument("--repeats", type=int, default=3,
                     help="repetitions per impl; best (min-time) run is reported")
     ap.add_argument("--seed", type=int, default=0)
@@ -202,12 +215,37 @@ def main():
         res = {
             impl: best([
                 run_engine(csr, feats, impl, hot_slots, args.chunk_vertices,
-                           args.seed)
+                           args.seed, backend=args.backend)
                 for _ in range(reps)
             ])
             for impl in ("python", "array")
         }
         all_results["engine"] = {**res, "speedup": report("engine (full run_layer)", res)}
+    if args.mode == "backend":
+        # ROADMAP item: numpy vs jax chunk aggregation end-to-end, with the
+        # array policy impl fixed so only the aggregation backend varies
+        feats = make_features(args.vertices, args.dim, seed=args.seed)
+        res = {
+            backend: best([
+                run_engine(csr, feats, "array", hot_slots, args.chunk_vertices,
+                           args.seed, backend=backend)
+                for _ in range(reps)
+            ])
+            for backend in ("numpy", "jax")
+        }
+        ny, jx = res["numpy"], res["jax"]
+        assert ny["evictions"] == jx["evictions"], "backends diverged (evictions)"
+        speedup = ny["seconds"] / jx["seconds"]
+        print("\n== backend (full run_layer, policy_impl=array) ==")
+        for r in (ny, jx):
+            print(
+                f"  {r['backend']:<7} {r['seconds']:8.3f}s   "
+                f"{r['chunks_per_s']:10.1f} chunks/s   "
+                f"{r['vertices_per_s']:12.0f} vertices/s   "
+                f"evictions={r['evictions']} reloads={r['reloads']}"
+            )
+        print(f"  speedup (jax over numpy): {speedup:.2f}x")
+        all_results["backend"] = {**res, "jax_speedup": speedup}
     if args.json:
         print(json.dumps(all_results, indent=2))
 

@@ -1,0 +1,204 @@
+"""Serving-path benchmark: batched vertex lookups against a servable layer.
+
+Builds an engine-shaped spill set (every vertex exactly once, scattered
+across overlapping sorted files), compacts it into block-indexed servable
+files, then measures the ``VertexQueryEngine`` under uniform and Zipfian
+batched workloads across a sweep of page-cache budgets (0 = cache
+disabled).  Reports queries/s, rows/s, cache hit rate, and disk blocks
+read, as JSON with ``--json``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_serve.py                # 1M rows
+    PYTHONPATH=src python benchmarks/bench_serve.py --vertices 200000 \
+        --batches 500 --cache-mb 0,16 --json out.json              # CI scale
+
+Acceptance target (ISSUE 2): >= 10x throughput for a Zipfian workload
+with a warm cache vs cache disabled on a >= 1M-vertex store.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.serve_gnn import ServableLayer, ShardedPageCache, VertexQueryEngine
+from repro.serve_gnn.servable import compact_spills
+from repro.storage.iostats import IOStats
+from repro.storage.spill import SpillSet, write_spill
+
+
+def build_servable(
+    root: str,
+    vertices: int,
+    dim: int,
+    raw_files: int,
+    rows_per_file: int,
+    block_rows: int,
+    seed: int,
+) -> tuple[list[str], dict]:
+    """Write an overlapping raw spill set, then compact it — the same path
+    ``GraphStore.register_servable_layer`` runs on engine output."""
+    rng = np.random.default_rng(seed)
+    rows = rng.standard_normal((vertices, dim)).astype(np.float32)
+    perm = rng.permutation(vertices)
+    raw_dir = os.path.join(root, "raw")
+    os.makedirs(raw_dir, exist_ok=True)
+    ss = SpillSet()
+    bounds = np.linspace(0, vertices, raw_files + 1).astype(int)
+    t0 = time.perf_counter()
+    for i in range(raw_files):
+        sel = perm[bounds[i] : bounds[i + 1]]
+        ss.add(
+            write_spill(
+                os.path.join(raw_dir, f"raw{i:03d}.spill"),
+                sel.astype(np.uint64),
+                rows[sel],
+            )
+        )
+    write_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stats = IOStats()
+    paths = compact_spills(
+        ss,
+        os.path.join(root, "servable"),
+        rows_per_file=rows_per_file,
+        block_rows=block_rows,
+        stats=stats,
+    )
+    meta = {
+        "raw_write_s": round(write_s, 2),
+        "compact_s": round(time.perf_counter() - t0, 2),
+        "compact_bytes_read": stats.bytes_read,
+        "compact_bytes_written": stats.bytes_written,
+        "servable_files": len(paths),
+    }
+    return paths, meta
+
+
+def make_workload(
+    kind: str, vertices: int, batches: int, batch: int, alpha: float, seed: int
+) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return rng.integers(0, vertices, size=(batches, batch))
+    if kind == "zipf":
+        # rank == vertex id: ATLAS reorders hubs first, so popularity-by-id
+        # is the natural serving layout
+        return (rng.zipf(alpha, size=(batches, batch)) - 1) % vertices
+    raise ValueError(kind)
+
+
+def run_workload(
+    paths: list[str],
+    block_rows: int,
+    queries: np.ndarray,
+    cache_bytes: int,
+    num_shards: int,
+    warm_batches: int,
+) -> dict:
+    layer = ServableLayer.open(paths, block_rows=block_rows)
+    cache = (
+        ShardedPageCache(layer.num_blocks, cache_bytes, num_shards=num_shards)
+        if cache_bytes > 0
+        else None
+    )
+    eng = VertexQueryEngine(layer, cache=cache)
+    for q in queries[:warm_batches]:
+        eng.lookup(q)
+    timed = queries[warm_batches:]
+    t0 = time.perf_counter()
+    for q in timed:
+        eng.lookup(q)
+    seconds = time.perf_counter() - t0
+    rec = {
+        "cache_mb": cache_bytes / (1 << 20),
+        "batches": len(timed),
+        "batch": queries.shape[1],
+        "seconds": round(seconds, 4),
+        "queries_per_s": round(len(timed) / seconds, 1),
+        "rows_per_s": round(len(timed) * queries.shape[1] / seconds, 1),
+        "disk_blocks_read": eng.blocks_read,
+        "disk_bytes_read": eng.stats.bytes_read,
+    }
+    if cache is not None:
+        rec["hit_rate"] = round(cache.hit_rate(), 4)
+        rec["resident_mb"] = round(cache.resident_bytes / (1 << 20), 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--vertices", type=int, default=1_000_000)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--raw-files", type=int, default=8)
+    ap.add_argument("--rows-per-file", type=int, default=1 << 18)
+    ap.add_argument("--block-rows", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--batches", type=int, default=2000)
+    ap.add_argument("--warm-batches", type=int, default=500)
+    ap.add_argument("--zipf-alpha", type=float, default=1.1)
+    ap.add_argument("--cache-mb", default="0,8,64",
+                    help="comma-separated page-cache budgets in MiB (0 = off)")
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--workloads", default="zipf,uniform")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write results to this path")
+    args = ap.parse_args()
+
+    budgets = [float(x) for x in args.cache_mb.split(",")]
+    results = {
+        "config": {
+            k: getattr(args, k)
+            for k in ("vertices", "dim", "block_rows", "batch", "batches",
+                      "warm_batches", "zipf_alpha", "shards")
+        }
+    }
+    with tempfile.TemporaryDirectory() as td:
+        print(f"building servable store: V={args.vertices} d={args.dim} "
+              f"({args.vertices * args.dim * 4 >> 20} MiB rows)")
+        paths, meta = build_servable(
+            td, args.vertices, args.dim, args.raw_files,
+            args.rows_per_file, args.block_rows, args.seed,
+        )
+        results["build"] = meta
+        print(f"  raw write {meta['raw_write_s']}s, "
+              f"compaction {meta['compact_s']}s -> {meta['servable_files']} files")
+        for kind in args.workloads.split(","):
+            queries = make_workload(
+                kind, args.vertices, args.batches + args.warm_batches,
+                args.batch, args.zipf_alpha, args.seed + 1,
+            )
+            rows = []
+            for mb in budgets:
+                rec = run_workload(
+                    paths, args.block_rows, queries, int(mb * (1 << 20)),
+                    args.shards, args.warm_batches,
+                )
+                rows.append(rec)
+                extra = (f"hit_rate={rec['hit_rate']}" if "hit_rate" in rec
+                         else "cache off")
+                print(f"  {kind:<8} cache={mb:6.1f}MiB  "
+                      f"{rec['queries_per_s']:>10.1f} q/s  "
+                      f"{rec['rows_per_s']:>12.1f} rows/s  "
+                      f"blocks_read={rec['disk_blocks_read']:<8d} {extra}")
+            results[kind] = rows
+            base = next((r for r in rows if r["cache_mb"] == 0), None)
+            best = max(rows, key=lambda r: r["queries_per_s"])
+            if base is not None and best is not base:
+                speedup = best["queries_per_s"] / base["queries_per_s"]
+                results[f"{kind}_speedup_vs_no_cache"] = round(speedup, 2)
+                print(f"  {kind}: warm-cache speedup vs cache-off: "
+                      f"{speedup:.1f}x")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
 from repro.core.reorder import make_order, relabel_features_chunked, relabel_graph
 from repro.graphs.synth import make_features, powerlaw_graph
 from repro.models.gnn import dense_reference, init_gnn_params
+from repro.serve_gnn import ServableLayer, ShardedPageCache, VertexQueryEngine
 from repro.storage.layout import GraphStore
 
 
@@ -40,6 +41,19 @@ def main():
         engine = AtlasEngine(cfg)
         spills, metrics = engine.run(store, specs, f"{td}/work")
         out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
+
+        # serving: point/batch lookups straight from the spill set — no
+        # dense [V, d] materialisation (docs/serving.md,
+        # examples/serve_embeddings.py)
+        store.register_servable_layer(len(specs), spills)
+        layer = ServableLayer.from_store(store, len(specs))
+        qe = VertexQueryEngine(
+            layer, cache=ShardedPageCache(layer.num_blocks, budget_bytes=2 << 20)
+        )
+        sample = np.random.default_rng(0).integers(0, v, size=256)
+        assert np.array_equal(qe.lookup(sample), out[sample].astype(layer.dtype))
+        print(f"== served {len(sample)} lookups "
+              f"({qe.blocks_read} cold block reads)")
 
     for m in metrics:
         print(

@@ -256,18 +256,23 @@ class RandomPolicy(EvictionPolicy):
 # --------------------------------------------------------------------------
 
 
-class ArrayMinPendingPolicy(EvictionPolicy):
-    """Min-pending buckets as NumPy intrusive doubly-linked lists.
+class ArrayBucketList:
+    """NumPy intrusive doubly-linked bucket lists over an integer key space.
 
-    Vertex v is a list node: ``nxt[v]``/``prv[v]`` link it within the
-    bucket for its pending count ``score[v]`` (NIL = not tracked).  New and
-    updated vertices append at the bucket tail, selection walks buckets
-    from the smallest score and each bucket head-first — exactly the FIFO
-    order of the ``OrderedDict`` oracle, so victim sets match bit-for-bit.
+    Key k is a list node: ``nxt[k]``/``prv[k]`` link it within the bucket
+    for its integer ``score[k]`` (NIL = not tracked).  New and updated keys
+    append at the bucket tail; ``walk_min`` visits buckets from the
+    smallest score and each bucket head-first — exactly the FIFO order of
+    an ``OrderedDict`` per bucket.
+
+    This is the shared machinery behind the eviction policies (keys =
+    vertex ids, score = pending count; a single bucket degenerates to LRU)
+    and the serving-side block page cache (keys = global block ids,
+    single-bucket LRU) — see repro.serve_gnn.page_cache.
     """
 
-    def __init__(self, num_vertices: int, max_pending: int | None = None):
-        v = int(num_vertices)
+    def __init__(self, capacity: int, max_score: int | None = None):
+        v = int(capacity)
         self._nxt = np.full(v, NIL, dtype=np.int64)
         self._prv = np.full(v, NIL, dtype=np.int64)
         self._score = np.full(v, NIL, dtype=np.int64)
@@ -277,7 +282,7 @@ class ArrayMinPendingPolicy(EvictionPolicy):
         # run starts to run ends with one lexsort instead of pointer chasing
         self._seq = np.zeros(v, dtype=np.int64)
         self._seq_counter = 0
-        cap = int(max_pending) + 1 if max_pending is not None else 64
+        cap = int(max_score) + 1 if max_score is not None else 64
         cap = max(cap, 1)
         self._head = np.full(cap, NIL, dtype=np.int64)
         self._tail = np.full(cap, NIL, dtype=np.int64)
@@ -297,9 +302,10 @@ class ArrayMinPendingPolicy(EvictionPolicy):
         self._count = np.concatenate([self._count, np.zeros(pad, np.int64)])
 
     # ------------------------------------------------------------ splice
-    def _append(self, vs: np.ndarray, scores: np.ndarray) -> None:
-        """Append each vertex at the tail of its score's bucket, preserving
+    def append(self, vs: np.ndarray, scores: np.ndarray) -> None:
+        """Append each key at the tail of its score's bucket, preserving
         batch order within equal scores (== sequential oracle order)."""
+        self._ensure_score_capacity(int(scores.max()))
         order = np.argsort(scores, kind="stable")
         sv = vs[order]
         sc = scores[order]
@@ -325,7 +331,7 @@ class ArrayMinPendingPolicy(EvictionPolicy):
         self._min_lb = lo if self._size == 0 else min(self._min_lb, lo)
         self._size += len(vs)
 
-    def _detach(self, vs: np.ndarray) -> None:
+    def detach(self, vs: np.ndarray) -> None:
         """Unlink a batch (possibly containing adjacent nodes) from its
         buckets in O(batch log batch) with no pointer chasing.
 
@@ -362,55 +368,18 @@ class ArrayMinPendingPolicy(EvictionPolicy):
         removed = np.bincount(score[vs])  # length = max batch score + 1
         self._count[: len(removed)] -= removed
         pos[vs] = NIL
+        score[vs] = NIL  # detached keys are untracked until re-appended
         self._size -= len(vs)
 
-    # ------------------------------------------------------------- batch
-    def _scores_for(self, vs: np.ndarray, pendings: np.ndarray) -> np.ndarray:
-        return np.asarray(pendings, dtype=np.int64)
+    # -------------------------------------------------------- membership
+    def tracked(self, vs: np.ndarray) -> np.ndarray:
+        """Boolean mask: which of `vs` are currently linked."""
+        return self._score[vs] >= 0
 
-    def add_many(self, vertices: np.ndarray, pendings: np.ndarray) -> None:
-        vs = np.asarray(vertices, dtype=np.int64)
-        if not len(vs):
-            return
-        scores = self._scores_for(vs, pendings)
-        self._ensure_score_capacity(int(scores.max()))
-        self._append(vs, scores)
-
-    def remove_many(self, vertices: np.ndarray) -> None:
-        vs = np.asarray(vertices, dtype=np.int64)
-        if not len(vs):
-            return
-        if np.any(self._score[vs] < 0):
-            bad = vs[self._score[vs] < 0][0]
-            raise KeyError(f"vertex {int(bad)} not tracked by policy")
-        self._detach(vs)
-        self._score[vs] = NIL
-
-    def update_many(
-        self, vertices: np.ndarray, old_pending: np.ndarray, new_pending: np.ndarray
-    ) -> None:
-        vs = np.asarray(vertices, dtype=np.int64)
-        if not len(vs):
-            return
-        scores = self._scores_for(vs, new_pending)
-        self._detach(vs)
-        self._ensure_score_capacity(int(scores.max()))
-        self._append(vs, scores)
-
-    # ------------------------------------------------------------ scalar
-    def add(self, vertex: int, pending: int) -> None:
-        self.add_many(np.array([vertex]), np.array([pending]))
-
-    def remove(self, vertex: int) -> None:
-        self.remove_many(np.array([vertex]))
-
-    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
-        self.update_many(
-            np.array([vertex]), np.array([old_pending]), np.array([new_pending])
-        )
-
-    # --------------------------------------------------------- selection
-    def select_victims(self, k: int, exclude=None) -> np.ndarray:
+    # --------------------------------------------------------- traversal
+    def walk_min(self, k: int, exclude=None) -> np.ndarray:
+        """Up to k keys in (score asc, FIFO-within-bucket) order, skipping
+        excluded ones.  Non-destructive: pair with ``detach`` to evict."""
         if self._size == 0:
             return np.empty(0, dtype=np.int64)
         base = self._min_lb
@@ -449,6 +418,64 @@ class ArrayMinPendingPolicy(EvictionPolicy):
         return self._size
 
 
+class ArrayMinPendingPolicy(EvictionPolicy):
+    """Min-pending buckets over the shared ``ArrayBucketList``: keys are
+    vertex ids, scores are pending counts.  Victim selection walks buckets
+    smallest-score-first, head-first — exactly the FIFO order of the
+    ``OrderedDict`` oracle, so victim sets match bit-for-bit."""
+
+    def __init__(self, num_vertices: int, max_pending: int | None = None):
+        self._list = ArrayBucketList(num_vertices, max_score=max_pending)
+
+    # ------------------------------------------------------------- batch
+    def _scores_for(self, vs: np.ndarray, pendings: np.ndarray) -> np.ndarray:
+        return np.asarray(pendings, dtype=np.int64)
+
+    def add_many(self, vertices: np.ndarray, pendings: np.ndarray) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        if not len(vs):
+            return
+        self._list.append(vs, self._scores_for(vs, pendings))
+
+    def remove_many(self, vertices: np.ndarray) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        if not len(vs):
+            return
+        tracked = self._list.tracked(vs)
+        if not np.all(tracked):
+            raise KeyError(f"vertex {int(vs[~tracked][0])} not tracked by policy")
+        self._list.detach(vs)
+
+    def update_many(
+        self, vertices: np.ndarray, old_pending: np.ndarray, new_pending: np.ndarray
+    ) -> None:
+        vs = np.asarray(vertices, dtype=np.int64)
+        if not len(vs):
+            return
+        scores = self._scores_for(vs, new_pending)
+        self._list.detach(vs)
+        self._list.append(vs, scores)
+
+    # ------------------------------------------------------------ scalar
+    def add(self, vertex: int, pending: int) -> None:
+        self.add_many(np.array([vertex]), np.array([pending]))
+
+    def remove(self, vertex: int) -> None:
+        self.remove_many(np.array([vertex]))
+
+    def update(self, vertex: int, old_pending: int, new_pending: int) -> None:
+        self.update_many(
+            np.array([vertex]), np.array([old_pending]), np.array([new_pending])
+        )
+
+    # --------------------------------------------------------- selection
+    def select_victims(self, k: int, exclude=None) -> np.ndarray:
+        return self._list.walk_min(k, exclude=exclude)
+
+    def __len__(self) -> int:
+        return len(self._list)
+
+
 class ArrayLRUPolicy(ArrayMinPendingPolicy):
     """LRU as a single bucket of the intrusive list: append = touch,
     selection walks head-first = oldest-first."""
@@ -458,15 +485,6 @@ class ArrayLRUPolicy(ArrayMinPendingPolicy):
 
     def _scores_for(self, vs: np.ndarray, pendings: np.ndarray) -> np.ndarray:
         return np.zeros(len(vs), dtype=np.int64)
-
-    def update_many(
-        self, vertices: np.ndarray, old_pending: np.ndarray, new_pending: np.ndarray
-    ) -> None:
-        vs = np.asarray(vertices, dtype=np.int64)
-        if not len(vs):
-            return
-        self._detach(vs)  # move-to-end == detach + re-append
-        self._append(vs, np.zeros(len(vs), dtype=np.int64))
 
 
 class ArrayRandomPolicy(EvictionPolicy):

@@ -156,6 +156,10 @@ def run_cell(arch, shape_name, mesh, mesh_tag, outdir, smoke=False, save_hlo=Tru
         mem = compiled.memory_analysis()
         print(f"[dryrun] {cell_id} memory_analysis:", mem)
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            # some jax versions return one dict per computation; the entry
+            # point is first (and usually the only one)
+            cost = cost[0] if cost else {}
         print(f"[dryrun] {cell_id} cost_analysis:",
               {k: v for k, v in sorted(cost.items())
                if k in ("flops", "bytes accessed", "transcendentals")})

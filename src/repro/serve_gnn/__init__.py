@@ -1,0 +1,25 @@
+"""Out-of-core embedding serving: the read-side counterpart of the ATLAS
+inference engine (docs/serving.md).
+
+``AtlasEngine.run`` produces sorted spill files; this package turns them
+into a queryable on-disk store without ever materialising the dense
+[V, d] matrix:
+
+* ``compact_spills`` / ``GraphStore.register_servable_layer`` — one-time
+  merge into disjoint block-indexed servable files,
+* ``ServableLayer`` — the opened read view (file + block binary search),
+* ``ShardedPageCache`` — memory-budgeted LRU over decoded blocks,
+* ``VertexQueryEngine`` — batched, deduplicating point/batch lookups,
+  bit-identical to ``spills_to_dense`` rows.
+"""
+
+from repro.serve_gnn.page_cache import ShardedPageCache
+from repro.serve_gnn.query import VertexQueryEngine
+from repro.serve_gnn.servable import ServableLayer, compact_spills
+
+__all__ = [
+    "ShardedPageCache",
+    "VertexQueryEngine",
+    "ServableLayer",
+    "compact_spills",
+]

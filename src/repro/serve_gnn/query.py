@@ -1,0 +1,116 @@
+"""Batched vertex-embedding query engine over a servable layer.
+
+A request is an arbitrary array of vertex ids (duplicates allowed, any
+order).  The engine deduplicates and sorts the ids, maps them to global
+block keys with two binary searches (file bounds, then the file's block
+bounds — no id-column scan), consults the page cache, and coalesces the
+misses into block reads issued in ascending block order, i.e. sequential
+within each file.  Rows come back in request order, bit-identical to the
+rows ``spills_to_dense`` would materialise for the same spill set.
+
+Ids absent from the layer raise ``KeyError`` — absence is detected for
+free: either no file/block id-range covers the id (no I/O at all), or the
+fetched block's id column has a gap where the id would sort.
+
+Threading model: the shared tier is the (lock-sharded) page cache; a
+``VertexQueryEngine`` is a cheap per-thread view — instantiate one per
+query thread over the same ``ServableLayer`` and cache.  A single engine
+used from several threads still returns correct rows, but its counters
+(``queries``/``rows_served``/``blocks_read``/``last_blocks_read``) are
+unsynchronized and would race.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve_gnn.page_cache import ShardedPageCache
+from repro.serve_gnn.servable import ServableLayer
+from repro.storage.iostats import IOStats
+
+
+class VertexQueryEngine:
+    def __init__(
+        self,
+        layer: ServableLayer,
+        cache: ShardedPageCache | None = None,
+        stats: IOStats | None = None,
+    ):
+        self.layer = layer
+        self.cache = cache
+        self.stats = stats if stats is not None else IOStats()
+        self.queries = 0
+        self.rows_served = 0
+        self.blocks_read = 0  # cumulative disk block fetches
+        self.last_blocks_read = 0  # disk block fetches of the last lookup
+
+    # ------------------------------------------------------------ lookup
+    def lookup(self, vertex_ids: np.ndarray) -> np.ndarray:
+        """Rows for `vertex_ids` (any order, duplicates fine), in request
+        order, dtype = the layer's storage dtype."""
+        q = np.asarray(vertex_ids, dtype=np.uint64).ravel()
+        self.queries += 1
+        self.last_blocks_read = 0
+        if len(q) == 0:
+            return np.empty((0, self.layer.dim), dtype=self.layer.dtype)
+        uids, inv = np.unique(q, return_inverse=True)
+        _, gkey = self.layer.locate(uids)
+        if np.any(gkey < 0):
+            self._raise_missing(uids[gkey < 0])
+
+        # uids are sorted and files/blocks are id-ordered, so gkey is
+        # non-decreasing: each needed block owns one contiguous uid slice
+        starts = np.flatnonzero(np.r_[True, gkey[1:] != gkey[:-1]])
+        ends = np.r_[starts[1:], len(gkey)]
+        need_keys = gkey[starts]
+        blocks: list = [None] * len(need_keys)
+        if self.cache is not None:
+            blocks = self.cache.get_many(need_keys)
+        miss = [i for i, b in enumerate(blocks) if b is None]
+        if miss:
+            # need_keys is sorted, so misses are fetched in ascending block
+            # order — one open per file, sequential reads within it
+            fetched = self.layer.read_blocks_by_keys(
+                need_keys[np.asarray(miss)], stats=self.stats
+            )
+            for i, blk in zip(miss, fetched):
+                blocks[i] = blk
+            self.last_blocks_read = len(miss)
+            self.blocks_read += len(miss)
+            if self.cache is not None:
+                mi = np.asarray(miss, dtype=np.int64)
+                self.cache.put_many(need_keys[mi], [blocks[i] for i in miss])
+
+        out = np.empty((len(uids), self.layer.dim), dtype=self.layer.dtype)
+        for j in range(len(need_keys)):
+            lo, hi = starts[j], ends[j]
+            want = uids[lo:hi]
+            bids, brows = blocks[j]
+            pos = np.searchsorted(bids, want)
+            found = pos < len(bids)
+            found[found] &= bids[pos[found]] == want[found]
+            if not np.all(found):
+                self._raise_missing(want[~found])
+            out[lo:hi] = brows[pos]
+        self.rows_served += len(q)
+        return out[inv]
+
+    @staticmethod
+    def _raise_missing(ids: np.ndarray) -> None:
+        sample = ", ".join(str(int(i)) for i in ids[:8])
+        raise KeyError(
+            f"{len(ids)} vertex id(s) not present in servable layer "
+            f"(first: {sample})"
+        )
+
+    # ----------------------------------------------------------- metrics
+    def snapshot(self) -> dict:
+        rec = {
+            "queries": self.queries,
+            "rows_served": self.rows_served,
+            "blocks_read": self.blocks_read,
+            **{f"io_{k}": v for k, v in self.stats.snapshot().items()},
+        }
+        if self.cache is not None:
+            rec["cache"] = self.cache.snapshot()
+        return rec

@@ -1,0 +1,218 @@
+"""Servable embedding layers: compaction + the block-addressed read view.
+
+``AtlasEngine.run`` leaves one layer's embeddings as a *spill set*: sorted
+immutable files whose id ranges overlap (each partition flushes its buffer
+many times).  That layout is perfect for the write path but poor for point
+lookups — a vertex could live in any of the overlapping files.
+
+``compact_spills`` performs a one-time streaming merge into *servable*
+files with pairwise-disjoint id ranges (each holding a contiguous run of
+the globally sorted ids), every file carrying its sidecar block index.
+After compaction a vertex lookup is: binary search for the file, binary
+search the file's block bounds, read exactly one block.
+
+``ServableLayer`` is the opened read view: spill descriptors (file
+handles are opened per read, so open-fd count stays bounded) + loaded
+(rebuilt if needed) block indexes + the global block-key numbering the
+page cache and query engine share.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.storage.iostats import IOStats
+from repro.storage.spill import (
+    DEFAULT_BLOCK_ROWS,
+    BlockIndex,
+    SpillFile,
+    SpillSet,
+    write_spill,
+)
+
+DEFAULT_ROWS_PER_FILE = 1 << 18  # 256k rows per servable file
+
+
+def compact_spills(
+    spills: SpillSet,
+    out_dir: str,
+    rows_per_file: int = DEFAULT_ROWS_PER_FILE,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    stats: IOStats | None = None,
+) -> list[str]:
+    """Merge an overlapping spill set into disjoint sorted servable files.
+
+    Memory stays bounded: only the id columns (8 bytes/row) are held to
+    compute the global cut points; row data streams through one target
+    file at a time via the existing merge-on-read range reads.
+    """
+    if not spills.files:
+        raise ValueError("cannot compact an empty spill set")
+    os.makedirs(out_dir, exist_ok=True)
+    # id columns (8 bytes/row) are read once and kept: they give both the
+    # global cut points and each raw file's row bounds per output file, so
+    # row data is the only thing read per target (read_rows, no re-reads)
+    id_cols = [f.read_ids(stats) for f in spills.files]
+    all_ids = np.sort(np.concatenate(id_cols))
+    if len(np.unique(all_ids)) != len(all_ids):
+        raise ValueError("duplicate vertex rows across spill files")
+    n = len(all_ids)
+    rows_per_file = max(1, int(rows_per_file))
+    paths: list[str] = []
+    for i, start in enumerate(range(0, n, rows_per_file)):
+        lo = int(all_ids[start])
+        end = min(start + rows_per_file, n)
+        hi = int(all_ids[end - 1]) + 1
+        parts = []
+        for f, fids in zip(spills.files, id_cols):
+            a = int(np.searchsorted(fids, lo, side="left"))
+            b = int(np.searchsorted(fids, hi, side="left"))
+            if b > a:
+                parts.append((fids[a:b], f.read_rows(a, b, stats)))
+        ids = np.concatenate([p[0] for p in parts])
+        rows = np.concatenate([p[1] for p in parts])
+        order = np.argsort(ids, kind="stable")
+        ids, rows = ids[order], rows[order]
+        assert len(ids) == end - start
+        path = os.path.join(out_dir, f"servable_{i:05d}.spill")
+        write_spill(
+            path, ids, rows, stats=stats, presorted=True, block_rows=block_rows
+        )
+        paths.append(path)
+    return paths
+
+
+@dataclasses.dataclass
+class ServableLayer:
+    """Opened read view over disjoint servable files.
+
+    Global block key of block b in file f is ``block_base[f] + b`` — a
+    dense integer space shared with the page cache's intrusive lists.
+    """
+
+    files: list[SpillFile]
+    indexes: list[BlockIndex]
+    file_min: np.ndarray  # u64 [n_files], sorted
+    file_max: np.ndarray  # u64 [n_files]
+    block_base: np.ndarray  # i64 [n_files], prefix sum of per-file blocks
+    num_rows: int
+    dim: int
+    dtype: np.dtype
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.block_base[-1]) + self.indexes[-1].num_blocks
+
+    @staticmethod
+    def open(
+        paths: list[str],
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+        stats: IOStats | None = None,
+    ) -> "ServableLayer":
+        """Open servable files, loading each sidecar index (transparently
+        rebuilt when missing or stale) and validating disjointness."""
+        if not paths:
+            raise ValueError("servable layer has no files")
+        files = sorted((SpillFile.open(p) for p in paths), key=lambda f: f.min_id)
+        if any(f.dim != files[0].dim or f.dtype != files[0].dtype for f in files):
+            raise ValueError("servable files disagree on dim/dtype")
+        indexes = [f.load_index(block_rows=block_rows, stats=stats) for f in files]
+        file_min = np.array([f.min_id for f in files], dtype=np.uint64)
+        file_max = np.array([f.max_id for f in files], dtype=np.uint64)
+        if np.any(file_min[1:] <= file_max[:-1]):
+            raise ValueError(
+                "servable files have overlapping id ranges; "
+                "run compact_spills (GraphStore.register_servable_layer) first"
+            )
+        nb = np.array([ix.num_blocks for ix in indexes], dtype=np.int64)
+        block_base = np.concatenate([[0], np.cumsum(nb)[:-1]]).astype(np.int64)
+        return ServableLayer(
+            files=files,
+            indexes=indexes,
+            file_min=file_min,
+            file_max=file_max,
+            block_base=block_base,
+            num_rows=sum(f.num_rows for f in files),
+            dim=files[0].dim,
+            dtype=files[0].dtype,
+        )
+
+    @staticmethod
+    def from_store(
+        store, layer: int, stats: IOStats | None = None
+    ) -> "ServableLayer":
+        """Open the servable view a ``GraphStore`` manifest registered for
+        ``layer`` (see ``GraphStore.register_servable_layer``)."""
+        servable = store.manifest.get("servable_layers", {})
+        entry = servable.get(str(layer))
+        if entry is None:
+            raise KeyError(
+                f"layer {layer} not registered as servable "
+                f"(have: {sorted(servable)})"
+            )
+        return ServableLayer.open(
+            entry["files"], block_rows=entry["block_rows"], stats=stats
+        )
+
+    # ------------------------------------------------------------ lookup
+    def locate(self, unique_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Map sorted unique vertex ids to (file index, global block key).
+
+        Both are -1 where no file/block id-range can contain the id (a
+        definitive miss without touching disk).  Ids inside a block's
+        [min, max] range may still be absent — the gap is only visible in
+        the block's id column, checked after the block is fetched.
+        """
+        uids = np.asarray(unique_ids, dtype=np.uint64)
+        f = np.searchsorted(self.file_max, uids, side="left").astype(np.int64)
+        in_file = f < len(self.files)
+        in_file[in_file] &= uids[in_file] >= self.file_min[f[in_file]]
+        f[~in_file] = -1
+        gkey = np.full(len(uids), -1, dtype=np.int64)
+        for fi in np.unique(f[in_file]).tolist():
+            sel = f == fi
+            b = self.indexes[fi].find_blocks(uids[sel])
+            g = np.where(b >= 0, self.block_base[fi] + b, -1)
+            gkey[sel] = g
+        f[gkey < 0] = -1
+        return f, gkey
+
+    def read_block_by_key(
+        self, gkey: int, stats: IOStats | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        fi = int(np.searchsorted(self.block_base, gkey, side="right")) - 1
+        b = int(gkey) - int(self.block_base[fi])
+        return self.files[fi].read_block(self.indexes[fi], b, stats=stats)
+
+    def read_blocks_by_keys(
+        self, gkeys: np.ndarray, stats: IOStats | None = None
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Fetch several blocks, opening each underlying file only once;
+        with `gkeys` sorted (the query engine's miss list), the reads within
+        a file proceed in ascending offset order — sequential I/O."""
+        gkeys = np.asarray(gkeys, dtype=np.int64)
+        fis = np.searchsorted(self.block_base, gkeys, side="right") - 1
+        blocks: list = [None] * len(gkeys)
+        for fi in np.unique(fis).tolist():
+            sel = np.flatnonzero(fis == fi)
+            f, idx = self.files[fi], self.indexes[fi]
+            row_bytes = f.dim * f.dtype.itemsize
+            with open(f.path, "rb") as fh:
+                for j in sel.tolist():
+                    b = int(gkeys[j]) - int(self.block_base[fi])
+                    n = idx.rows_in_block(b)
+                    fh.seek(int(idx.id_off[b]))
+                    id_buf = fh.read(n * 8)
+                    fh.seek(int(idx.data_off[b]))
+                    data_buf = fh.read(n * row_bytes)
+                    if stats is not None:
+                        stats.add_read(len(id_buf))
+                        stats.add_read(len(data_buf))
+                    blocks[j] = (
+                        np.frombuffer(id_buf, dtype=np.uint64),
+                        np.frombuffer(data_buf, dtype=f.dtype).reshape(n, f.dim),
+                    )
+        return blocks

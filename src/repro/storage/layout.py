@@ -13,13 +13,25 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
+from typing import Iterable, Iterator
 
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.graphs.partition import RangePartition
 from repro.storage.iostats import IOStats
-from repro.storage.spill import SpillFile, SpillSet, write_spill
+from repro.storage.spill import DEFAULT_BLOCK_ROWS, SpillFile, SpillSet, write_spill
+
+
+def _feature_chunks(features) -> Iterator[np.ndarray]:
+    """Normalise the features argument: a dense [V, d] array is one chunk,
+    anything else is treated as an iterable of [n_i, d] row chunks."""
+    if isinstance(features, np.ndarray):
+        yield features
+    else:
+        for chunk in features:
+            yield np.asarray(chunk)
 
 
 class GraphStore:
@@ -34,38 +46,77 @@ class GraphStore:
     def create(
         root: str,
         csr: CSRGraph,
-        features: np.ndarray,
+        features: np.ndarray | Iterable[np.ndarray],
         num_partitions: int = 8,
         feature_rows_per_spill: int | None = None,
         stats: IOStats | None = None,
     ) -> "GraphStore":
+        """Build a store from a dense [V, d] feature array or — for layer-0
+        stores larger than RAM — any iterable of [n_i, d] row chunks in
+        vertex-id order.  Only one spill file's worth of rows is ever
+        buffered from an iterator."""
         os.makedirs(root, exist_ok=True)
         os.makedirs(os.path.join(root, "features_l0"), exist_ok=True)
         np.save(os.path.join(root, "indptr.npy"), csr.indptr)
         np.save(os.path.join(root, "indices.npy"), csr.indices)
         v = csr.num_vertices
         part = RangePartition(v, num_partitions)
+        chunks = _feature_chunks(features)
+        carry = np.empty((0, 0))  # rows yielded but not yet written
+        feat_dim: int | None = None
+        feat_dtype: np.dtype | None = None
         files = []
         for p in range(num_partitions):
             lo, hi = part.range_of(p)
             step = feature_rows_per_spill or (hi - lo)
             for s0 in range(lo, hi, max(step, 1)):
                 s1 = min(s0 + step, hi)
+                parts = [carry] if len(carry) else []
+                got = len(carry)
+                while got < s1 - s0:
+                    try:
+                        chunk = next(chunks)
+                    except StopIteration:
+                        raise ValueError(
+                            f"feature chunks yielded {s0 + got} rows, "
+                            f"expected {v}"
+                        ) from None
+                    if chunk.ndim != 2:
+                        raise ValueError("feature chunks must be [n, dim]")
+                    if feat_dim is None:
+                        feat_dim, feat_dtype = chunk.shape[1], chunk.dtype
+                    elif chunk.shape[1] != feat_dim or chunk.dtype != feat_dtype:
+                        raise ValueError(
+                            f"feature chunk [{len(chunk)}, {chunk.shape[1]}] "
+                            f"{chunk.dtype} disagrees with first chunk "
+                            f"(dim {feat_dim}, {feat_dtype})"
+                        )
+                    parts.append(chunk)
+                    got += len(chunk)
+                rows = parts[0] if len(parts) == 1 else np.concatenate(parts)
+                rows, carry = rows[: s1 - s0], rows[s1 - s0 :]
                 path = os.path.join(root, "features_l0", f"part{p:04d}_{s0}.spill")
                 sf = write_spill(
                     path,
                     np.arange(s0, s1, dtype=np.uint64),
-                    features[s0:s1],
+                    rows,
                     stats=stats,
                     presorted=True,
                 )
                 files.append(sf.path)
+        extra = len(carry)
+        for chunk in chunks:  # trailing empty chunks are fine
+            extra += len(np.asarray(chunk))
+            if extra:
+                break
+        if extra:
+            raise ValueError(f"feature chunks yielded more rows than {v} vertices")
         store = GraphStore(root)
         store.manifest = {
             "num_vertices": v,
             "num_edges": csr.num_edges,
-            "feat_dim": int(features.shape[1]),
-            "feat_dtype": str(features.dtype),
+            "feat_dim": int(feat_dim),
+            "feat_dtype": str(feat_dtype),
             "num_partitions": num_partitions,
             "layer0_files": files,
         }
@@ -113,6 +164,55 @@ class GraphStore:
         for path in self.manifest["layer0_files"]:
             ss.add(SpillFile.open(path))
         return ss
+
+    # ----------------------------------------------------------- serving
+    def register_servable_layer(
+        self,
+        layer: int,
+        spills: SpillSet,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+        rows_per_file: int | None = None,
+        stats: IOStats | None = None,
+    ) -> list[str]:
+        """Compact one layer's (possibly overlapping) spill set into
+        disjoint block-indexed servable files under the store root and
+        record them in the manifest.  Returns the servable file paths;
+        open them with ``repro.serve_gnn.ServableLayer.from_store``.
+
+        Re-registering a layer replaces its previous servable files.
+        """
+        from repro.serve_gnn.servable import DEFAULT_ROWS_PER_FILE, compact_spills
+
+        out_dir = os.path.join(self.root, f"servable_l{layer}")
+        # compact into a staging dir and swap only on success, so a failed
+        # re-registration never destroys the currently registered layer
+        tmp_dir = out_dir + ".compact"
+        if os.path.exists(tmp_dir):
+            shutil.rmtree(tmp_dir)
+        tmp_files = compact_spills(
+            spills,
+            tmp_dir,
+            rows_per_file=rows_per_file or DEFAULT_ROWS_PER_FILE,
+            block_rows=block_rows,
+            stats=stats,
+        )
+        if os.path.exists(out_dir):
+            shutil.rmtree(out_dir)
+        os.replace(tmp_dir, out_dir)
+        files = [os.path.join(out_dir, os.path.basename(p)) for p in tmp_files]
+        first = SpillFile.open(files[0])
+        self.manifest.setdefault("servable_layers", {})[str(layer)] = {
+            "files": files,
+            "block_rows": int(block_rows),
+            "num_rows": spills.total_rows(),
+            "dim": first.dim,
+            "dtype": str(first.dtype),
+        }
+        self._write_manifest()
+        return files
+
+    def servable_layers(self) -> list[int]:
+        return sorted(int(k) for k in self.manifest.get("servable_layers", {}))
 
     def layer_dir(self, layer: int) -> str:
         d = os.path.join(self.root, f"embeddings_l{layer}")

@@ -1,0 +1,457 @@
+"""The serving read path: block indexes, compaction, sharded page cache,
+and the batched vertex query engine (docs/serving.md)."""
+
+import os
+
+import numpy as np
+import pytest
+
+try:  # the property test sweeps a fixed grid; hypothesis widens it when present
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import init_gnn_params
+from repro.serve_gnn import (
+    ServableLayer,
+    ShardedPageCache,
+    VertexQueryEngine,
+    compact_spills,
+)
+from repro.storage.iostats import IOStats
+from repro.storage.layout import GraphStore
+from repro.storage.spill import BlockIndex, SpillFile, SpillSet, write_spill
+
+
+def scattered_spillset(tmp, rng, num_vertices, dim, n_files, sparse=False):
+    """An overlapping spill set like the engine writes: every vertex exactly
+    once, scattered across files whose id ranges interleave."""
+    ids = np.arange(num_vertices, dtype=np.int64)
+    if sparse:  # non-contiguous vertex ids
+        ids = np.sort(rng.choice(4 * num_vertices, num_vertices, replace=False))
+    perm = rng.permutation(num_vertices)
+    rows = rng.standard_normal((num_vertices, dim)).astype(np.float32)
+    ss = SpillSet()
+    bounds = np.linspace(0, num_vertices, n_files + 1).astype(int)
+    for i in range(n_files):
+        sel = perm[bounds[i] : bounds[i + 1]]
+        if len(sel):
+            ss.add(
+                write_spill(
+                    str(tmp / f"sc{i}.spill"),
+                    ids[sel].astype(np.uint64),
+                    rows[sel],
+                    block_rows=64,
+                )
+            )
+    dense = {int(ids[j]): rows[j] for j in range(num_vertices)}
+    return ss, dense
+
+
+# --------------------------------------------------------------------------
+# Block index sidecars
+# --------------------------------------------------------------------------
+
+
+def test_write_spill_emits_sidecar_index(tmp_path):
+    ids = np.arange(100, dtype=np.uint64) * 3
+    rows = np.arange(400, dtype=np.float32).reshape(100, 4)
+    sf = write_spill(str(tmp_path / "a.spill"), ids, rows, block_rows=16)
+    assert os.path.exists(sf.index_path)
+    idx = sf.load_index()
+    assert idx.num_blocks == 7 and idx.block_rows == 16
+    assert idx.block_min[0] == 0 and idx.block_max[-1] == 99 * 3
+    # blocks are disjoint and cover the file in order
+    assert np.all(idx.block_min[1:] > idx.block_max[:-1])
+    for b in range(idx.num_blocks):
+        bids, brows = sf.read_block(idx, b)
+        s = b * 16
+        assert np.array_equal(bids, ids[s : s + 16])
+        assert np.array_equal(brows, rows[s : s + 16])
+
+
+def test_index_rebuilt_when_missing_and_when_stale(tmp_path):
+    path = str(tmp_path / "a.spill")
+    ids = np.arange(50, dtype=np.uint64)
+    rows = np.zeros((50, 2), dtype=np.float32)
+    sf = write_spill(path, ids, rows, block_rows=8)
+    os.remove(sf.index_path)
+    idx = sf.load_index(block_rows=8)  # transparent rebuild
+    assert os.path.exists(sf.index_path) and idx.num_blocks == 7
+    # rewrite the data file without a sidecar: the old index is stale
+    write_spill(path, ids[:20], rows[:20] + 1, block_rows=None)
+    sf2 = SpillFile.open(path)
+    stale = BlockIndex.load(sf2.index_path)
+    assert not stale.matches(sf2)
+    idx2 = sf2.load_index(block_rows=4)
+    assert idx2.matches(sf2) and idx2.num_rows == 20
+    # rebuild=False surfaces the problem instead
+    os.remove(sf2.index_path)
+    with pytest.raises(ValueError, match="missing or stale"):
+        sf2.load_index(rebuild=False)
+
+
+def test_corrupt_index_is_rebuilt(tmp_path):
+    sf = write_spill(
+        str(tmp_path / "a.spill"),
+        np.arange(30, dtype=np.uint64),
+        np.zeros((30, 3), dtype=np.float32),
+        block_rows=7,
+    )
+    with open(sf.index_path, "r+b") as f:
+        f.truncate(10)
+    idx = sf.load_index(block_rows=7)
+    assert idx.num_blocks == 5 and idx.matches(sf)
+    with open(sf.index_path, "r+b") as f:
+        f.write(b"JUNKJUNK")
+    assert sf.load_index(block_rows=7).matches(sf)
+    # corrupt dtype-code field (magic/version/length intact) also rebuilds
+    with open(sf.index_path, "r+b") as f:
+        f.seek(16)  # 4s magic + ver + block_rows + dim -> dtype code
+        f.write((255).to_bytes(4, "little"))
+    assert sf.load_index(block_rows=7).matches(sf)
+
+
+def test_truncated_and_corrupt_spill_files_error_clearly(tmp_path):
+    path = str(tmp_path / "a.spill")
+    write_spill(
+        path, np.arange(40, dtype=np.uint64), np.zeros((40, 4), dtype=np.float32)
+    )
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 17)
+    with pytest.raises(ValueError, match="truncated"):
+        SpillFile.open(path)
+    with open(path, "r+b") as f:
+        f.write(b"XXXX")
+    with pytest.raises(ValueError, match="magic"):
+        SpillFile.open(path)
+    with open(path, "r+b") as f:
+        f.truncate(8)
+    with pytest.raises(ValueError, match="truncated"):
+        SpillFile.open(path)
+
+
+# --------------------------------------------------------------------------
+# Streaming store builds (layer-0 larger than RAM)
+# --------------------------------------------------------------------------
+
+
+def test_graph_store_create_from_chunk_iterator(tmp_path):
+    v, d = 1000, 8
+    csr = powerlaw_graph(v, 4, seed=0)
+    feats = make_features(v, d, seed=0)
+
+    def chunks(step):
+        for s in range(0, v, step):
+            yield feats[s : s + step]
+
+    dense = GraphStore.create(
+        str(tmp_path / "a"), csr, feats, num_partitions=3, feature_rows_per_spill=100
+    )
+    # chunk size deliberately misaligned with spill and partition boundaries
+    streamed = GraphStore.create(
+        str(tmp_path / "b"),
+        csr,
+        chunks(137),
+        num_partitions=3,
+        feature_rows_per_spill=100,
+    )
+    assert streamed.feat_dim == dense.feat_dim == d
+    ia, ra = dense.layer0_spills().read_id_range(0, v)
+    ib, rb = streamed.layer0_spills().read_id_range(0, v)
+    assert np.array_equal(ia, ib)
+    assert np.array_equal(ra, rb)
+    assert np.array_equal(rb, feats)
+
+
+def test_graph_store_create_iterator_row_count_mismatch(tmp_path):
+    v = 200
+    csr = powerlaw_graph(v, 4, seed=0)
+    feats = make_features(v, 4, seed=0)
+    with pytest.raises(ValueError, match="expected 200"):
+        GraphStore.create(str(tmp_path / "few"), csr, iter([feats[:50]]))
+    with pytest.raises(ValueError, match="more rows"):
+        GraphStore.create(str(tmp_path / "many"), csr, iter([feats, feats[:1]]))
+    # a trailing zero-row chunk is not surplus
+    store = GraphStore.create(str(tmp_path / "ok"), csr, iter([feats, feats[:0]]))
+    assert store.num_vertices == v
+
+
+def test_graph_store_create_iterator_rejects_mismatched_chunks(tmp_path):
+    v = 100
+    csr = powerlaw_graph(v, 4, seed=0)
+    feats = make_features(v, 4, seed=0)
+    with pytest.raises(ValueError, match="disagrees"):
+        GraphStore.create(
+            str(tmp_path / "dim"), csr, iter([feats[:50], feats[50:, :2]])
+        )
+    with pytest.raises(ValueError, match="disagrees"):
+        GraphStore.create(
+            str(tmp_path / "dtype"),
+            csr,
+            iter([feats[:50], feats[50:].astype(np.float64)]),
+        )
+
+
+# --------------------------------------------------------------------------
+# Compaction + servable layer
+# --------------------------------------------------------------------------
+
+
+def test_compaction_produces_disjoint_indexed_files(tmp_path):
+    rng = np.random.default_rng(0)
+    ss, _ = scattered_spillset(tmp_path, rng, 900, 4, n_files=6)
+    paths = compact_spills(ss, str(tmp_path / "out"), rows_per_file=200, block_rows=32)
+    assert len(paths) == 5  # ceil(900 / 200)
+    layer = ServableLayer.open(paths, block_rows=32)
+    assert layer.num_rows == 900
+    assert np.all(layer.file_min[1:] > layer.file_max[:-1])
+    for p in paths:
+        assert os.path.exists(p + ".idx")
+
+
+def test_compaction_rejects_duplicates_and_empty(tmp_path):
+    ss = SpillSet()
+    with pytest.raises(ValueError, match="empty"):
+        compact_spills(ss, str(tmp_path / "o"))
+    ids = np.arange(10, dtype=np.uint64)
+    rows = np.zeros((10, 2), dtype=np.float32)
+    ss.add(write_spill(str(tmp_path / "a.spill"), ids, rows))
+    ss.add(write_spill(str(tmp_path / "b.spill"), ids[:3], rows[:3]))
+    with pytest.raises(ValueError, match="duplicate"):
+        compact_spills(ss, str(tmp_path / "o"))
+
+
+def test_servable_layer_rejects_overlapping_files(tmp_path):
+    a = write_spill(
+        str(tmp_path / "a.spill"),
+        np.array([0, 5], dtype=np.uint64),
+        np.zeros((2, 2), np.float32),
+    )
+    b = write_spill(
+        str(tmp_path / "b.spill"),
+        np.array([3, 9], dtype=np.uint64),
+        np.zeros((2, 2), np.float32),
+    )
+    with pytest.raises(ValueError, match="overlapping"):
+        ServableLayer.open([a.path, b.path])
+
+
+def test_register_servable_layer_manifest_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    v, d = 600, 4
+    csr = powerlaw_graph(v, 4, seed=1)
+    store = GraphStore.create(
+        str(tmp_path / "store"), csr, make_features(v, d, seed=1), num_partitions=2
+    )
+    ss, dense = scattered_spillset(tmp_path, rng, v, d, n_files=5)
+    store.register_servable_layer(1, ss, block_rows=64, rows_per_file=256)
+    assert store.servable_layers() == [1]
+    # reopened store serves identical rows
+    layer = ServableLayer.from_store(GraphStore.open(store.root), 1)
+    eng = VertexQueryEngine(layer)
+    q = rng.integers(0, v, size=100)
+    got = eng.lookup(q)
+    assert np.array_equal(got, np.stack([dense[int(i)] for i in q]))
+    # re-registering replaces the previous files
+    store.register_servable_layer(1, ss, block_rows=32, rows_per_file=128)
+    entry = store.manifest["servable_layers"]["1"]
+    assert entry["block_rows"] == 32
+    with pytest.raises(KeyError, match="not registered"):
+        ServableLayer.from_store(store, 7)
+    # a failing re-registration must not destroy the registered layer
+    bad = SpillSet()
+    bad.add(ss.files[0])
+    bad.add(ss.files[0])  # duplicate rows -> compaction raises
+    with pytest.raises(ValueError, match="duplicate"):
+        store.register_servable_layer(1, bad)
+    layer = ServableLayer.from_store(store, 1)  # still opens and serves
+    assert np.array_equal(
+        VertexQueryEngine(layer).lookup(q), np.stack([dense[int(i)] for i in q])
+    )
+
+
+# --------------------------------------------------------------------------
+# Sharded page cache
+# --------------------------------------------------------------------------
+
+
+def _blk(key, n=10, dim=4):
+    ids = np.arange(key * 100, key * 100 + n, dtype=np.uint64)
+    return ids, np.full((n, dim), float(key), dtype=np.float32)
+
+
+def test_page_cache_hit_miss_and_touch_order():
+    cache = ShardedPageCache(num_keys=64, budget_bytes=1 << 20, num_shards=1)
+    keys = np.array([3, 7, 11])
+    assert cache.get_many(keys) == [None, None, None]
+    assert cache.misses == 3
+    cache.put_many(keys, [_blk(3), _blk(7), _blk(11)])
+    got = cache.get_many(np.array([7, 3]))
+    assert got[0] is not None and np.all(got[0][1] == 7.0)
+    assert cache.hits == 2 and cache.hit_rate() == 2 / 5
+    # a cache fitting two blocks (240 bytes each) evicts insertion-oldest
+    small = ShardedPageCache(num_keys=64, budget_bytes=2 * 240, num_shards=1)
+    small.put_many(keys, [_blk(3), _blk(7), _blk(11)])
+    assert small.resident_bytes <= small.budget_bytes
+    assert small.get_many(np.array([3]))[0] is None  # oldest evicted
+    assert small.get_many(np.array([11]))[0] is not None  # newest kept
+
+
+def test_page_cache_budget_respected_and_block_too_big_skipped():
+    cache = ShardedPageCache(num_keys=32, budget_bytes=100, num_shards=2)
+    cache.put_many(np.array([1]), [_blk(1, n=100)])  # way over any shard budget
+    assert cache.resident_blocks == 0
+    rng = np.random.default_rng(0)
+    cache = ShardedPageCache(num_keys=256, budget_bytes=5000, num_shards=4)
+    for _ in range(50):
+        k = int(rng.integers(0, 256))
+        cache.put_many(np.array([k]), [_blk(k)])
+        assert cache.resident_bytes <= cache.budget_bytes
+    assert cache.evicted_blocks > 0
+
+
+# --------------------------------------------------------------------------
+# Query engine
+# --------------------------------------------------------------------------
+
+
+def test_cold_point_lookup_reads_at_most_two_blocks(tmp_path):
+    rng = np.random.default_rng(2)
+    v = 2000
+    ss, _ = scattered_spillset(tmp_path, rng, v, 4, n_files=7)
+    paths = compact_spills(ss, str(tmp_path / "o"), rows_per_file=300, block_rows=32)
+    eng = VertexQueryEngine(ServableLayer.open(paths, block_rows=32))
+    for vid in rng.integers(0, v, size=200):
+        eng.lookup(np.array([vid]))
+        assert eng.last_blocks_read <= 2
+
+
+def test_query_engine_missing_ids_raise(tmp_path):
+    rng = np.random.default_rng(3)
+    ss, dense = scattered_spillset(tmp_path, rng, 500, 4, n_files=3, sparse=True)
+    paths = compact_spills(ss, str(tmp_path / "o"), rows_per_file=128, block_rows=16)
+    eng = VertexQueryEngine(ServableLayer.open(paths, block_rows=16))
+    present = sorted(dense)
+    # beyond every file range
+    with pytest.raises(KeyError, match="not present"):
+        eng.lookup(np.array([max(present) + 1000]))
+    # inside a block's [min, max] range but absent from its id column
+    gaps = [x for x in range(present[0], present[0] + 200) if x not in dense]
+    assert gaps
+    with pytest.raises(KeyError, match="not present"):
+        eng.lookup(np.array([gaps[0]]))
+    # a good batch containing one bad id fails loudly, not silently
+    with pytest.raises(KeyError):
+        eng.lookup(np.array([present[0], gaps[0], present[1]]))
+
+
+def test_query_engine_cache_transparency_and_warm_path(tmp_path):
+    rng = np.random.default_rng(4)
+    v, d = 1500, 8
+    ss, dense = scattered_spillset(tmp_path, rng, v, d, n_files=6)
+    paths = compact_spills(ss, str(tmp_path / "o"), rows_per_file=400, block_rows=64)
+    layer = ServableLayer.open(paths, block_rows=64)
+    cache = ShardedPageCache(layer.num_blocks, budget_bytes=8 << 20, num_shards=4)
+    cached = VertexQueryEngine(layer, cache=cache)
+    plain = VertexQueryEngine(ServableLayer.open(paths, block_rows=64))
+    queries = [rng.integers(0, v, size=int(s)) for s in rng.integers(1, 200, size=30)]
+    for q in queries:
+        assert np.array_equal(cached.lookup(q), plain.lookup(q))
+    # warm repeat touches no disk at all
+    before = cached.blocks_read
+    for q in queries:
+        cached.lookup(q)
+    assert cached.blocks_read == before
+    assert cache.hits > 0
+
+
+def _check_bit_identical(tmp_path_factory, n, dim, n_files, block_rows, sparse):
+    tmp = tmp_path_factory.mktemp("serve_prop")
+    rng = np.random.default_rng(n * 131 + dim * 7 + n_files)
+    ss, dense = scattered_spillset(tmp, rng, n, dim, n_files, sparse=sparse)
+    paths = compact_spills(
+        ss, str(tmp / "o"), rows_per_file=max(1, n // 3), block_rows=block_rows
+    )
+    layer = ServableLayer.open(paths, block_rows=block_rows)
+    cache = ShardedPageCache(layer.num_blocks, budget_bytes=1 << 18, num_shards=2)
+    eng = VertexQueryEngine(layer, cache=cache)
+    if not sparse:
+        ref = spills_to_dense(ss, n, dim)
+    present = np.array(sorted(dense), dtype=np.int64)
+    for _ in range(4):
+        q = present[rng.integers(0, len(present), size=rng.integers(1, 64))]
+        got = eng.lookup(q)
+        expect = (
+            ref[q]
+            if not sparse
+            else np.stack([dense[int(i)] for i in q]).astype(np.float32)
+        )
+        assert got.dtype == np.float32
+        assert np.array_equal(got, expect)
+
+
+@pytest.mark.parametrize(
+    "n,dim,n_files,block_rows,sparse",
+    [
+        (2, 1, 1, 4, False),
+        (37, 5, 3, 4, True),
+        (128, 5, 6, 32, False),
+        (255, 1, 4, 32, True),
+        (400, 5, 2, 4, False),
+        (331, 5, 5, 32, True),
+    ],
+)
+def test_query_rows_bit_identical_to_spills_to_dense(
+    tmp_path_factory, n, dim, n_files, block_rows, sparse
+):
+    """Acceptance property: every queried vertex row equals the
+    spills_to_dense row for the same spill set, bit for bit."""
+    _check_bit_identical(tmp_path_factory, n, dim, n_files, block_rows, sparse)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.integers(2, 400),
+        dim=st.sampled_from([1, 5]),
+        n_files=st.integers(1, 6),
+        block_rows=st.sampled_from([4, 32]),
+        sparse=st.booleans(),
+    )
+    def test_query_rows_bit_identical_hypothesis(
+        tmp_path_factory, n, dim, n_files, block_rows, sparse
+    ):
+        _check_bit_identical(tmp_path_factory, n, dim, n_files, block_rows, sparse)
+
+
+def test_engine_output_served_end_to_end(tmp_path):
+    """Full pipeline: AtlasEngine.run -> register_servable_layer -> lookups
+    match the dense materialisation of the final embeddings."""
+    v, d = 1200, 16
+    csr = powerlaw_graph(v, 6, seed=5, self_loops=True)
+    feats = make_features(v, d, seed=5)
+    specs = init_gnn_params("gcn", [d, 12, 8], seed=5)
+    store = GraphStore.create(str(tmp_path / "store"), csr, feats, num_partitions=2)
+    cfg = AtlasConfig(chunk_bytes=64 * d * 4, hot_slots=400, spill_buffer_rows=128)
+    spills, _ = AtlasEngine(cfg).run(store, specs, str(tmp_path / "work"))
+    ref = spills_to_dense(spills, v, specs[-1].out_dim)
+    store.register_servable_layer(
+        len(specs), spills, block_rows=128, rows_per_file=500
+    )
+    stats = IOStats()
+    layer = ServableLayer.from_store(store, len(specs), stats=stats)
+    cache = ShardedPageCache(layer.num_blocks, budget_bytes=1 << 20)
+    eng = VertexQueryEngine(layer, cache=cache, stats=stats)
+    rng = np.random.default_rng(6)
+    for _ in range(10):
+        q = rng.integers(0, v, size=64)
+        assert np.array_equal(eng.lookup(q), ref[q])
+    assert np.array_equal(eng.lookup(np.arange(v)), ref)  # full sweep too
