@@ -27,7 +27,7 @@ import time
 import numpy as np
 
 from repro.core import orchestrator as ost
-from repro.core.atlas import AtlasConfig, AtlasEngine
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
 from repro.core.eviction import make_policy
 from repro.core.memory_manager import MemoryManager
 from repro.core.orchestrator import Orchestrator
@@ -62,6 +62,9 @@ class SinkGrad:
         self.graduated = 0
 
     def add(self, vertex_ids, rows):
+        self.graduated += len(vertex_ids)
+
+    def add_gather(self, vertex_ids, source, rows_index):
         self.graduated += len(vertex_ids)
 
 
@@ -127,6 +130,9 @@ def run_engine(
     seed: int,
     backend: str = "numpy",
 ):
+    """Full run_layer on a real on-disk store.  ``impl`` selects BOTH the
+    eviction-policy impl and the layer-tail impl (python = full scalar
+    oracle baseline, array = the vectorized engine)."""
     d = feats.shape[1]
     specs = init_gnn_params("gcn", [d, 8], seed=seed)
     cfg = AtlasConfig(
@@ -134,14 +140,16 @@ def run_engine(
         hot_slots=hot_slots,
         eviction="at",
         policy_impl=impl,
+        tail_impl=impl,
         backend=backend,
         seed=seed,
     )
     with tempfile.TemporaryDirectory() as td:
         store = GraphStore.create(td + "/store", csr, feats, num_partitions=4)
         t0 = time.perf_counter()
-        _, metrics = AtlasEngine(cfg).run(store, specs, td + "/work")
+        spills, metrics = AtlasEngine(cfg).run(store, specs, td + "/work")
         seconds = time.perf_counter() - t0
+        out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
     m = metrics[0]
     return {
         "impl": impl,
@@ -152,7 +160,89 @@ def run_engine(
         "vertices_per_s": csr.num_vertices / seconds,
         "evictions": m.evictions,
         "reloads": m.reloads,
+        "tail_seconds": m.tail_seconds,
+        "tail_rows_per_s": m.tail_rows_per_s,
+        "transform_seconds": m.transform_seconds,
+        "spill_seconds": m.spill_seconds,
+        "output": out,
     }
+
+
+def capture_graduation_stream(csr, feats, hot_slots, chunk_vertices, seed):
+    """One engine run with ``GraduationProcessor.add_gather`` shimmed to
+    record the exact per-call id batches the delivery loop produces — the
+    real layer-tail workload, replayed below under both tail impls."""
+    from repro.core.graduation import GraduationProcessor
+
+    batches: list[np.ndarray] = []
+    orig = GraduationProcessor.add_gather
+
+    def recording(self, ids, source, rows_index):
+        batches.append(np.asarray(ids).copy())
+        return orig(self, ids, source, rows_index)
+
+    GraduationProcessor.add_gather = recording
+    try:
+        run_engine(csr, feats, "array", hot_slots, chunk_vertices, seed)
+    finally:
+        GraduationProcessor.add_gather = orig
+    return batches
+
+
+def run_tail_replay(batches, num_vertices: int, dim: int, hot_slots: int, seed: int):
+    """Replay the captured graduation stream through both tail impls,
+    single-threaded (no GIL cross-talk), and isolate the bookkeeping cost:
+    total minus the dense transform and the physical spill write, which
+    are identical work under either impl.  Asserts bit-identical output."""
+    from repro.core.graduation import make_graduation
+    from repro.storage.writer import EmbeddingWriter
+
+    rng = np.random.default_rng(seed)
+    hot = rng.standard_normal((hot_slots, dim)).astype(np.float32)
+    slot_batches = [
+        rng.integers(0, hot_slots, len(b)).astype(np.int64) for b in batches
+    ]
+    spec = init_gnn_params("gcn", [dim, 8], seed=seed)[0]
+    from repro.models.gnn import layer_update
+
+    results, outputs = {}, {}
+    for impl in ("python", "array"):
+        best = None
+        for _ in range(3):
+            with tempfile.TemporaryDirectory() as td:
+                w = EmbeddingWriter(
+                    td, num_vertices=num_vertices, dim=8, dtype=np.float32,
+                    num_partitions=8, buffer_rows=4096,
+                    threaded=False, ingest_impl=impl,
+                )
+                g = make_graduation(
+                    impl, transform=lambda r: layer_update(spec, r),
+                    sink=w.write, dim=dim, dtype=np.float32,
+                    buffer_rows=8192, threaded=False,
+                )
+                t0 = time.perf_counter()
+                for ids, slots in zip(batches, slot_batches):
+                    g.add_gather(ids, hot, slots)
+                g.close()
+                spills = w.close()
+                total = time.perf_counter() - t0
+                book = total - g.transform_seconds - w.spill_seconds
+                if best is None or book < best["tail_seconds"]:
+                    best = {
+                        "impl": impl,
+                        "tail_seconds": book,
+                        "tail_rows_per_s": num_vertices / book,
+                        "total_seconds": total,
+                        "transform_seconds": g.transform_seconds,
+                        "spill_seconds": w.spill_seconds,
+                    }
+                if impl not in outputs:
+                    outputs[impl] = spills_to_dense(spills, num_vertices, 8)
+        results[impl] = best
+    assert np.array_equal(outputs["python"], outputs["array"]), (
+        "tail impls diverged (spill contents)"
+    )
+    return results
 
 
 def report(title: str, results: dict) -> float:
@@ -172,6 +262,24 @@ def report(title: str, results: dict) -> float:
     return speedup
 
 
+def report_tail(results: dict) -> float:
+    """Layer-tail (graduation bookkeeping + writer scatter) throughput
+    from the single-threaded stream replay, excluding the dense transform
+    and physical spill write that are identical work under either impl."""
+    py, ar = results["python"], results["array"]
+    tail_speedup = ar["tail_rows_per_s"] / py["tail_rows_per_s"]
+    print("  -- layer tail (graduation + spill scatter), stream replay --")
+    for r in (py, ar):
+        print(
+            f"  {r['impl']:<7} {r['tail_seconds']*1000:8.1f}ms tail   "
+            f"{r['tail_rows_per_s']:12.0f} rows/s   "
+            f"(transform {r['transform_seconds']:.3f}s, "
+            f"spill {r['spill_seconds']:.3f}s)"
+        )
+    print(f"  tail speedup (array over python): {tail_speedup:.2f}x")
+    return tail_speedup
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--vertices", type=int, default=120_000)
@@ -187,7 +295,8 @@ def main():
     ap.add_argument("--repeats", type=int, default=3,
                     help="repetitions per impl; best (min-time) run is reported")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", action="store_true", help="emit raw results as JSON")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write raw results as JSON to PATH ('-' for stdout)")
     args = ap.parse_args()
 
     hot_slots = max(16, int(args.vertices * args.hot_frac))
@@ -220,7 +329,26 @@ def main():
             ])
             for impl in ("python", "array")
         }
-        all_results["engine"] = {**res, "speedup": report("engine (full run_layer)", res)}
+        # the array tail must reproduce the python-oracle spills bit for bit
+        out_py, out_ar = res["python"].pop("output"), res["array"].pop("output")
+        if not np.array_equal(out_py, out_ar):
+            raise AssertionError("impls diverged (spill contents)")
+        speedup = report("engine (full run_layer)", res)
+        print("  spill contents: bit-identical across impls")
+        # layer-tail throughput: replay the engine's real graduation
+        # stream through both tail impls, single-threaded and isolated
+        batches = capture_graduation_stream(
+            csr, feats, hot_slots, args.chunk_vertices, args.seed
+        )
+        tail = run_tail_replay(
+            batches, args.vertices, args.dim, hot_slots, args.seed
+        )
+        tail_speedup = report_tail(tail)
+        print("  tail replay spill contents: bit-identical across impls")
+        all_results["engine"] = {
+            **res, "speedup": speedup,
+            "tail": tail, "tail_speedup": tail_speedup,
+        }
     if args.mode == "backend":
         # ROADMAP item: numpy vs jax chunk aggregation end-to-end, with the
         # array policy impl fixed so only the aggregation backend varies
@@ -234,6 +362,8 @@ def main():
             for backend in ("numpy", "jax")
         }
         ny, jx = res["numpy"], res["jax"]
+        # backends differ in float op order: same bookkeeping, not bitwise
+        ny.pop("output"), jx.pop("output")
         assert ny["evictions"] == jx["evictions"], "backends diverged (evictions)"
         speedup = ny["seconds"] / jx["seconds"]
         print("\n== backend (full run_layer, policy_impl=array) ==")
@@ -246,8 +376,12 @@ def main():
             )
         print(f"  speedup (jax over numpy): {speedup:.2f}x")
         all_results["backend"] = {**res, "jax_speedup": speedup}
-    if args.json:
+    if args.json == "-":
         print(json.dumps(all_results, indent=2))
+    elif args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_results, f, indent=2)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.broadcast import chunk_aggregate
 from repro.core.eviction import make_policy
-from repro.core.graduation import GraduationProcessor
+from repro.core.graduation import GraduationProcessor, make_graduation
 from repro.core.memory_manager import MemoryManager
 from repro.core.orchestrator import Orchestrator
 from repro.graphs.csr import degrees_from_csr
@@ -58,6 +58,8 @@ class AtlasConfig:
     queue_depth: int = 20
     backend: str = "numpy"  # 'numpy' | 'jax' chunk aggregation
     policy_impl: str = "array"  # 'array' (vectorized) | 'python' (scalar oracle)
+    tail_impl: str = "array"  # layer tail (graduation buffers + spill
+    # scatter): 'array' (ring buffers / argsort runs) | 'python' (oracle)
     threaded: bool = True  # dedicated reader/writer/offload threads
     prefetch_depth: int = 4
     seed: int = 0
@@ -82,6 +84,12 @@ class LayerMetrics:
     mean_span: float
     p95_span: float
     max_span: int
+    # layer-tail busy-time split (paper §3.6-3.7): bookkeeping the
+    # array-native tail targets vs the shared transform/disk costs
+    tail_seconds: float  # graduation buffering/emit + writer scatter
+    transform_seconds: float  # dense layer update (W·x + b + σ)
+    spill_seconds: float  # write_spill: sort + disk + fsync
+    tail_rows_per_s: float  # graduated rows / tail_seconds
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -212,8 +220,10 @@ class AtlasEngine:
             stats=write_stats,
             queue_depth=cfg.queue_depth,
             threaded=cfg.threaded,
+            ingest_impl=cfg.tail_impl,
         )
-        grad = GraduationProcessor(
+        grad = make_graduation(
+            cfg.tail_impl,
             transform=lambda rows: layer_update(spec, rows),
             sink=writer.write,
             dim=spec.hot_width,
@@ -269,27 +279,44 @@ class AtlasEngine:
                 shield[u_dst] = False
                 if spec.extra_self_message:
                     shield[chunk.start_id : chunk.end_id] = False
+
+            try:
+                grad.close()
+            finally:
+                # always shut the writer thread down, even when graduation
+                # re-raises a deferred offload error
+                layer_spills = writer.close()
+
+            if not orch.is_complete():
+                missing = orch.incomplete_vertices()
+                raise RuntimeError(
+                    f"layer {layer_index}: {len(missing)} vertices incomplete "
+                    f"(first: {missing[:8]})"
+                )
+            if writer.rows_written != num_vertices:
+                raise RuntimeError(
+                    f"layer {layer_index}: wrote {writer.rows_written} rows, "
+                    f"expected {num_vertices}"
+                )
+        except BaseException:
+            # a failed layer is discarded and replayed (layer = transaction),
+            # but a long-lived process must not leak the offload threads or
+            # the cold-store fd across failed attempts: best-effort shutdown
+            # without masking the original error (close() is idempotent)
+            for cleanup in (grad.close, writer.close, cold.close):
+                try:
+                    cleanup()
+                except BaseException:
+                    pass
+            raise
         finally:
             # unblock the reader thread if we bail out mid-layer
             it.close()
 
-        grad.close()
-        layer_spills = writer.close()
-
-        if not orch.is_complete():
-            missing = orch.incomplete_vertices()
-            raise RuntimeError(
-                f"layer {layer_index}: {len(missing)} vertices incomplete "
-                f"(first: {missing[:8]})"
-            )
-        if writer.rows_written != num_vertices:
-            raise RuntimeError(
-                f"layer {layer_index}: wrote {writer.rows_written} rows, "
-                f"expected {num_vertices}"
-            )
         cold.close()
 
         span = orch.span_stats()
+        tail_seconds = grad.tail_seconds + writer.tail_seconds
         m = LayerMetrics(
             layer=layer_index,
             seconds=time.perf_counter() - t0,
@@ -307,6 +334,10 @@ class AtlasEngine:
             mean_span=span["mean_span"],
             p95_span=span["p95_span"],
             max_span=span["max_span"],
+            tail_seconds=tail_seconds,
+            transform_seconds=grad.transform_seconds,
+            spill_seconds=writer.spill_seconds,
+            tail_rows_per_s=grad.graduated / tail_seconds if tail_seconds else 0.0,
         )
         return layer_spills, m
 
@@ -348,9 +379,9 @@ class AtlasEngine:
             if np.any(live):
                 mm.update_policy_scores(vs[live], old_pending[live], new_pending[live])
             if np.any(done_mask):
-                done = vs[done_mask]
-                rows = mm.release(done)
-                grad.add(done, rows)
+                # gather finalized rows straight from the hot store into
+                # the graduation buffer — no intermediate row array
+                mm.release_to(vs[done_mask], grad)
         return mm.reload_count - reloads_before
 
 

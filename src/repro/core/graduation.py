@@ -6,18 +6,50 @@ immediately).  Full buffers are handed to a dedicated offload thread which
 runs the layer's dense transform (the accelerator step: W·x + b + σ) and
 enqueues results to the writer.  Double buffering keeps the main thread
 filling one buffer while the other is in flight.
+
+Two buffering strategies, selected by ``impl``:
+
+* ``"array"`` (default) — fixed-cost-per-batch ring buffers: a small pool
+  of preallocated ``(ids, rows)`` buffer pairs.  ``add``/``add_gather``
+  copy straight into the active buffer; a full buffer is handed to the
+  offload thread **by reference** (only its pool index crosses the
+  queue), and the thread recycles it through a free-list once the
+  transform output is on its way to the writer.  No per-add list appends,
+  no per-emit ``np.concatenate`` over the backlog.
+* ``"python"`` — the seed's list-append + concatenate implementation,
+  kept as the correctness oracle and as the baseline the layer-tail
+  benchmark measures against (``bench_delivery.py --mode engine``).
+
+Both impls share the offload-thread failure semantics of
+``repro.util.offload.OffloadWorker``: a sink/transform error is sticky,
+``add``/``flush``/``close`` re-raise it (check-then-mutate, so buffered
+state is never corrupted by the raise), and producers can never deadlock
+on a dead consumer.
 """
 
 from __future__ import annotations
 
 import queue
-import threading
+import time
 from typing import Callable
 
 import numpy as np
 
+from repro.util.offload import OffloadWorker
+
+
+def make_graduation(impl: str, **kwargs) -> "GraduationProcessor":
+    if impl == "array":
+        return GraduationProcessor(**kwargs)
+    if impl == "python":
+        return PythonGraduationProcessor(**kwargs)
+    raise ValueError(f"unknown graduation impl {impl!r} (want 'array'|'python')")
+
 
 class GraduationProcessor:
+    """Array-native graduation stage: preallocated ring buffers handed to
+    the offload thread by reference."""
+
     def __init__(
         self,
         transform: Callable[[np.ndarray], np.ndarray],
@@ -27,38 +59,248 @@ class GraduationProcessor:
         buffer_rows: int = 8192,
         queue_depth: int = 20,
         threaded: bool = True,
+        num_buffers: int = 2,
     ):
         self.transform = transform
         self.sink = sink
         self.dim = dim
         self.dtype = np.dtype(dtype)
         self.buffer_rows = max(1, buffer_rows)
+        self.graduated = 0
+        self.offload_batches = 0
+        self._closed = False
+        # timing split for the layer-tail benchmark: _buffer_s accrues on
+        # the caller thread, _proc_s on the offload thread; transform and
+        # sink are tracked separately so tail bookkeeping can be isolated
+        self._buffer_s = 0.0
+        self._proc_s = 0.0
+        self._transform_s = 0.0
+        self._sink_s = 0.0
+
+        self._free: queue.Queue = queue.Queue()
+        self._active = 0
+        self._fill = 0
+        self._init_buffers(max(2, num_buffers) if threaded else 1)
+        self._worker: OffloadWorker | None = None
+        if threaded:
+            self._worker = OffloadWorker(
+                self._process,
+                name="atlas-graduate",
+                queue_depth=queue_depth,
+                on_drop=self._recycle_dropped,
+            )
+
+    def _init_buffers(self, n_buf: int) -> None:
+        # uint64 id buffers: the spill writer's native id dtype, so the
+        # emitted ids flow into EmbeddingWriter.write without a cast copy
+        self._buf_ids = [
+            np.empty(self.buffer_rows, dtype=np.uint64) for _ in range(n_buf)
+        ]
+        self._buf_rows = [
+            np.empty((self.buffer_rows, self.dim), dtype=self.dtype)
+            for _ in range(n_buf)
+        ]
+        for i in range(1, n_buf):
+            self._free.put(i)
+
+    def _recycle_dropped(self, item) -> None:
+        """Return a dropped in-flight buffer (by pool index) to the
+        free-list so a failed offload thread cannot strand the producer."""
+        self._free.put(item[0])
+
+    # -------------------------------------------------------------- feed
+    def _raise_pending(self) -> None:
+        if self._worker is not None:
+            self._worker.raise_pending()
+
+    def add(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        """Buffer graduated ``(ids, rows)``; emits full buffers downstream.
+
+        Checks for a deferred offload error *before* touching any state,
+        so a raise never leaves half-buffered rows behind."""
+        n = len(ids)
+        if n == 0:
+            return
+        self._raise_pending()
+        t0 = time.perf_counter()
+        ids = np.asarray(ids)
+        rows = np.asarray(rows)
+        pos = 0
+        while pos < n:
+            take = min(self.buffer_rows - self._fill, n - pos)
+            f = self._fill
+            self._buf_ids[self._active][f : f + take] = ids[pos : pos + take]
+            self._buf_rows[self._active][f : f + take] = rows[pos : pos + take]
+            self._fill += take
+            pos += take
+            if self._fill == self.buffer_rows:
+                self._buffer_s += time.perf_counter() - t0
+                self._emit()
+                t0 = time.perf_counter()
+        self.graduated += n
+        self._buffer_s += time.perf_counter() - t0
+
+    def add_gather(
+        self, ids: np.ndarray, source: np.ndarray, rows_index: np.ndarray
+    ) -> None:
+        """Like ``add(ids, source[rows_index])`` but gathers straight into
+        the ring buffer — no intermediate row copy.  This is the hand-off
+        ``MemoryManager.release_to`` uses to move finalized hot-store rows
+        into the graduation buffer in one fancy-indexed copy."""
+        n = len(ids)
+        if n == 0:
+            return
+        self._raise_pending()
+        t0 = time.perf_counter()
+        ids = np.asarray(ids)
+        rows_index = np.asarray(rows_index)
+        pos = 0
+        while pos < n:
+            take = min(self.buffer_rows - self._fill, n - pos)
+            f = self._fill
+            self._buf_ids[self._active][f : f + take] = ids[pos : pos + take]
+            np.take(
+                source,
+                rows_index[pos : pos + take],
+                axis=0,
+                out=self._buf_rows[self._active][f : f + take],
+                mode="clip",  # in-range by construction; avoids staging
+            )
+            self._fill += take
+            pos += take
+            if self._fill == self.buffer_rows:
+                self._buffer_s += time.perf_counter() - t0
+                self._emit()
+                t0 = time.perf_counter()
+        self.graduated += n
+        self._buffer_s += time.perf_counter() - t0
+
+    # -------------------------------------------------------------- emit
+    def _emit(self) -> None:
+        """Hand the active buffer downstream and acquire a fresh one."""
+        if not self._fill:
+            return
+        self._raise_pending()
+        item = (self._active, self._fill)
+        self.offload_batches += 1
+        self._fill = 0
+        if self._worker is not None:
+            self._worker.submit(item)
+            # block for a recycled buffer, re-checking for consumer death
+            # so a dead offload thread cannot strand us here
+            while True:
+                try:
+                    self._active = self._free.get(timeout=0.05)
+                    return
+                except queue.Empty:
+                    self._worker.raise_pending()
+        else:
+            self._process(item)
+            self._active = self._free.get()
+
+    def _process(self, item: tuple[int, int]) -> None:
+        """Offload-thread body: dense transform, then hand results to the
+        sink and recycle the buffer."""
+        buf, n = item
+        c0 = time.perf_counter()
+        ids = self._buf_ids[buf][:n]
+        rows = self._buf_rows[buf][:n]
+        c1 = time.perf_counter()
+        w0 = time.perf_counter()
+        out = self.transform(rows)
+        w1 = time.perf_counter()
+        c2 = time.perf_counter()
+        # the buffer is recycled below: nothing crossing into the sink may
+        # alias it (identity transforms do; real dense updates allocate)
+        if np.shares_memory(out, self._buf_rows[buf]):
+            out = out.copy()
+        out_ids = ids.copy()
+        c3 = time.perf_counter()
+        w2 = time.perf_counter()
+        self.sink(out_ids, out)
+        w3 = time.perf_counter()
+        self._free.put(buf)
+        self._transform_s += w1 - w0
+        self._sink_s += w3 - w2
+        self._proc_s += (c1 - c0) + (c3 - c2)
+
+    # ------------------------------------------------------------- flush
+    def flush(self) -> None:
+        """Emit any partial buffer.  Re-raises a deferred offload error
+        (before touching the buffer) instead of silently dropping rows."""
+        self._raise_pending()
+        if self._fill:
+            self._emit()
+
+    # ------------------------------------------------------------- close
+    def close(self) -> None:
+        """Flush, stop the offload thread, and re-raise any deferred
+        error.  Never returns with rows silently dropped: either every
+        buffered row reached the sink or close() raises."""
+        if self._closed:
+            self._raise_pending()
+            return
+        self._closed = True
+        try:
+            self.flush()
+        finally:
+            if self._worker is not None:
+                self._worker.close(raise_error=True)
+
+    # ------------------------------------------------------------- stats
+    @property
+    def transform_seconds(self) -> float:
+        return self._transform_s
+
+    @property
+    def sink_seconds(self) -> float:
+        return self._sink_s
+
+    @property
+    def tail_seconds(self) -> float:
+        """Busy time spent on graduation bookkeeping (buffering + emit +
+        offload plumbing), excluding the dense transform and the sink."""
+        return self._buffer_s + self._proc_s
+
+
+class PythonGraduationProcessor(GraduationProcessor):
+    """The seed's list-append + full-backlog ``np.concatenate`` strategy,
+    kept bit-identical as the oracle/baseline.  Shares the fixed offload
+    failure paths of the array implementation."""
+
+    def __init__(self, *args, **kwargs):
+        kwargs.pop("num_buffers", None)
+        super().__init__(*args, **kwargs, num_buffers=2)
         self._ids: list[np.ndarray] = []
         self._rows: list[np.ndarray] = []
         self._count = 0
-        self.graduated = 0
-        self.offload_batches = 0
-        self._threaded = threaded
-        if threaded:
-            self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
-            self._err: list[BaseException] = []
-            self._thread = threading.Thread(
-                target=self._offload_loop, name="atlas-graduate", daemon=True
-            )
-            self._thread.start()
 
-    # -------------------------------------------------------------- feed
+    def _init_buffers(self, n_buf: int) -> None:
+        pass  # list-append strategy: no preallocated ring buffers
+
+    def _recycle_dropped(self, item) -> None:
+        pass  # items are (ids, rows) tuples, nothing to recycle
+
     def add(self, ids: np.ndarray, rows: np.ndarray) -> None:
         if len(ids) == 0:
             return
+        self._raise_pending()
+        t0 = time.perf_counter()
         self._ids.append(np.asarray(ids))
         self._rows.append(np.asarray(rows))
         self._count += len(ids)
         self.graduated += len(ids)
+        self._buffer_s += time.perf_counter() - t0
         while self._count >= self.buffer_rows:
-            self._emit(self.buffer_rows)
+            self._emit_n(self.buffer_rows)
 
-    def _emit(self, n_rows: int) -> None:
+    def add_gather(self, ids, source, rows_index) -> None:
+        self._raise_pending()
+        self.add(ids, source[np.asarray(rows_index)].copy())
+
+    def _emit_n(self, n_rows: int) -> None:
+        self._raise_pending()
+        t0 = time.perf_counter()
         ids = np.concatenate(self._ids)
         rows = np.concatenate(self._rows)
         take_ids, rest_ids = ids[:n_rows], ids[n_rows:]
@@ -67,31 +309,23 @@ class GraduationProcessor:
         self._rows = [rest_rows] if len(rest_rows) else []
         self._count = len(rest_ids)
         self.offload_batches += 1
-        if self._threaded:
-            if self._err:
-                raise self._err[0]
-            self._q.put((take_ids, take_rows))
+        self._buffer_s += time.perf_counter() - t0
+        if self._worker is not None:
+            self._worker.submit((take_ids, take_rows))
         else:
-            self.sink(take_ids, self.transform(take_rows))
+            self._process((take_ids, take_rows))
 
-    def _offload_loop(self):
-        while True:
-            item = self._q.get()
-            if item is None:
-                return
-            try:
-                ids, rows = item
-                self.sink(ids, self.transform(rows))
-            except BaseException as exc:
-                self._err.append(exc)
-                return
+    def _process(self, item) -> None:
+        ids, rows = item
+        t0 = time.perf_counter()
+        out = self.transform(rows)
+        t1 = time.perf_counter()
+        self.sink(ids, out)
+        t2 = time.perf_counter()
+        self._transform_s += t1 - t0
+        self._sink_s += t2 - t1
 
-    # ------------------------------------------------------------- close
-    def close(self) -> None:
+    def flush(self) -> None:
+        self._raise_pending()
         if self._count:
-            self._emit(self._count)
-        if self._threaded:
-            self._q.put(None)
-            self._thread.join()
-            if self._err:
-                raise self._err[0]
+            self._emit_n(self._count)

@@ -181,13 +181,17 @@ class MemoryManager:
         self.policy.update_many(vertices, old_pending, new_pending)
 
     # ----------------------------------------------------------- graduate
-    def release(self, vertices: np.ndarray) -> np.ndarray:
-        """Copy out finalized rows and free slots (HOT -> COMPLETED)."""
+    def release_to(self, vertices: np.ndarray, grad) -> None:
+        """Gather finalized rows straight into the graduation buffer
+        (``grad.add_gather``) and free the slots — one fancy-indexed copy
+        hot-store -> ring buffer, no intermediate row array."""
         slots = self.slot_of[vertices]
-        rows = self.hot[slots].copy()
+        grad.add_gather(vertices, self.hot, slots)
+        self._free_released(vertices, slots)
+
+    def _free_released(self, vertices: np.ndarray, slots: np.ndarray) -> None:
         self.policy.remove_many(vertices)
         self.orch.to_completed(vertices)
         self.slot_of[vertices] = -1
         self.vertex_in_slot[slots] = -1
         self._push_slots(slots)
-        return rows

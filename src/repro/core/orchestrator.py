@@ -32,13 +32,18 @@ class Orchestrator:
         # receives a message in — measures how long partial state must live.
         self.first_touch = np.full(self.num_vertices, -1, dtype=np.int64)
         self.last_touch = np.full(self.num_vertices, -1, dtype=np.int64)
+        # O(1) completion check: graduation calls to_completed once per
+        # sub-batch on the layer tail, so completion is counter-tracked
+        # instead of re-scanning the O(|V|) state array
+        self._need_completed = int(np.count_nonzero(self.required > 0))
+        self._num_completed = 0
 
     # ----------------------------------------------------------- queries
     def pending(self, vertices: np.ndarray) -> np.ndarray:
         return self.required[vertices] - self.received[vertices]
 
     def is_complete(self) -> bool:
-        return bool(np.all(self.state[self.required > 0] == COMPLETED))
+        return self._num_completed >= self._need_completed
 
     def incomplete_vertices(self) -> np.ndarray:
         return np.nonzero((self.required > 0) & (self.state != COMPLETED))[0]
@@ -68,6 +73,7 @@ class Orchestrator:
     def to_completed(self, vertices: np.ndarray) -> None:
         self._check(vertices, (HOT,))
         self.state[vertices] = COMPLETED
+        self._num_completed += int(np.count_nonzero(self.required[vertices] > 0))
 
     # ---------------------------------------------------------- delivery
     def deliver(

@@ -219,15 +219,35 @@ def write_spill(
     stats: IOStats | None = None,
     presorted: bool = False,
     block_rows: int | None = DEFAULT_BLOCK_ROWS,
+    scratch: tuple[np.ndarray, np.ndarray] | None = None,
 ) -> "SpillFile":
-    """Sort (ids, rows) by id and write one spill file atomically."""
+    """Sort (ids, rows) by id and write one spill file atomically.
+
+    ``scratch`` is an optional caller-owned ``(ids_buf, rows_buf)`` pair
+    the sorted copy is gathered into (``np.take(..., out=...)``), so a
+    high-frequency writer (the layer tail's per-partition flusher) reuses
+    one arena instead of allocating two fresh arrays per spill."""
     ids = np.asarray(ids, dtype=np.uint64)
     rows = np.ascontiguousarray(rows)
     if rows.ndim != 2 or len(ids) != len(rows):
         raise ValueError("rows must be [n, dim] matching ids")
     if not presorted:
         order = np.argsort(ids, kind="stable")
-        ids, rows = ids[order], rows[order]
+        n = len(ids)
+        if (
+            scratch is not None
+            and len(scratch[0]) >= n
+            and len(scratch[1]) >= n
+            and scratch[0].dtype == ids.dtype
+            and scratch[1].dtype == rows.dtype
+            and scratch[1].shape[1:] == rows.shape[1:]
+        ):
+            s_ids, s_rows = scratch[0][:n], scratch[1][:n]
+            np.take(ids, order, out=s_ids, mode="clip")
+            np.take(rows, order, axis=0, out=s_rows, mode="clip")
+            ids, rows = s_ids, s_rows
+        else:
+            ids, rows = ids[order], rows[order]
     n, dim = rows.shape
     header = _HEADER.pack(
         _MAGIC,

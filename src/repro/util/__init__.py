@@ -1,0 +1,3 @@
+from repro.util.offload import OffloadWorker
+
+__all__ = ["OffloadWorker"]

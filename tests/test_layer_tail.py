@@ -1,0 +1,401 @@
+"""Layer-tail regression tests (ISSUE 3): graduation + spill writer.
+
+Covers the offload-thread failure paths (dead-consumer deadlock,
+error-path state corruption, close() flush ordering) and the
+threaded/non-threaded x array/python bit-identity property for random
+add/write interleavings.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.core.graduation import (
+    GraduationProcessor,
+    PythonGraduationProcessor,
+    make_graduation,
+)
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import dense_reference, init_gnn_params
+from repro.storage.writer import EmbeddingWriter
+from repro.util.offload import OffloadWorker
+
+from tests.conftest import build_store
+
+
+class SinkBoom(RuntimeError):
+    pass
+
+
+def run_with_timeout(fn, timeout=20.0):
+    """Run ``fn`` on a thread; fail the test instead of hanging forever
+    if the legacy producer-deadlock bug ever comes back."""
+    result: dict = {}
+
+    def body():
+        try:
+            fn()
+            result["ok"] = True
+        except BaseException as exc:  # noqa: BLE001
+            result["exc"] = exc
+
+    t = threading.Thread(target=body, daemon=True)
+    t.start()
+    t.join(timeout)
+    assert not t.is_alive(), "producer deadlocked on dead consumer thread"
+    return result
+
+
+# ---------------------------------------------------------------- offload
+def test_offload_worker_error_is_sticky_and_nonblocking():
+    def fn(item):
+        raise SinkBoom("consumer died")
+
+    w = OffloadWorker(fn, name="t", queue_depth=1)
+
+    def producer():
+        for i in range(50):
+            w.submit(i)
+
+    res = run_with_timeout(producer)
+    assert isinstance(res.get("exc"), SinkBoom)
+    with pytest.raises(SinkBoom):
+        w.close()
+
+
+def test_offload_worker_on_drop_recycles_drained_items():
+    dropped = []
+    started = threading.Event()
+
+    def fn(item):
+        started.set()
+        raise SinkBoom()
+
+    w = OffloadWorker(fn, name="t", queue_depth=10, on_drop=dropped.append)
+    w.submit("a")
+    started.wait(5)
+    for x in ("b", "c"):
+        try:
+            w.submit(x)
+        except SinkBoom:
+            break
+    with pytest.raises(SinkBoom):
+        w.close()
+    # the failing item and anything drained afterwards were handed back
+    assert "a" in dropped
+
+
+def test_offload_worker_submit_after_close():
+    w = OffloadWorker(lambda item: None, name="t")
+    w.close()
+    with pytest.raises(RuntimeError):
+        w.submit(1)
+
+
+# ------------------------------------------------- dead-consumer deadlock
+@pytest.mark.parametrize("impl", ["array", "python"])
+def test_graduation_sink_error_does_not_deadlock(impl):
+    def sink(ids, rows):
+        raise SinkBoom("sink rejects everything")
+
+    g = make_graduation(
+        impl, transform=lambda r: r * 2, sink=sink, dim=4,
+        dtype=np.float32, buffer_rows=1, queue_depth=1, threaded=True,
+    )
+
+    def producer():
+        for i in range(200):
+            g.add(np.array([i]), np.ones((1, 4), dtype=np.float32))
+        g.close()
+
+    res = run_with_timeout(producer)
+    assert isinstance(res.get("exc"), SinkBoom)
+    with pytest.raises(SinkBoom):
+        g.close()  # shut the offload thread down (close is idempotent)
+
+
+def test_writer_ingest_error_does_not_deadlock(tmp_path, monkeypatch):
+    import repro.storage.writer as writer_mod
+
+    def boom(*a, **kw):
+        raise SinkBoom("disk is gone")
+
+    monkeypatch.setattr(writer_mod, "write_spill", boom)
+    w = EmbeddingWriter(
+        str(tmp_path / "out"), num_vertices=1000, dim=4, dtype=np.float32,
+        num_partitions=2, buffer_rows=1, queue_depth=1, threaded=True,
+    )
+
+    def producer():
+        for i in range(200):
+            w.write(np.array([i % 1000], dtype=np.uint64),
+                    np.ones((1, 4), dtype=np.float32))
+        w.close()
+
+    res = run_with_timeout(producer)
+    assert isinstance(res.get("exc"), SinkBoom)
+    with pytest.raises(SinkBoom):
+        w.close()  # shut the writer thread down (close is idempotent)
+
+
+# ------------------------------------------------ error-path state safety
+@pytest.mark.parametrize("impl", ["array", "python"])
+def test_graduation_error_check_precedes_mutation(impl):
+    errored = threading.Event()
+
+    def sink(ids, rows):
+        errored.set()
+        raise SinkBoom()
+
+    g = make_graduation(
+        impl, transform=lambda r: r, sink=sink, dim=2,
+        dtype=np.float32, buffer_rows=4, queue_depth=2, threaded=True,
+    )
+    # fill one buffer -> emit -> sink raises on the offload thread
+    g.add(np.arange(4), np.zeros((4, 2), dtype=np.float32))
+    assert errored.wait(10)
+    # wait until the error is visible to the producer side
+    deadline = threading.Event()
+    for _ in range(200):
+        if g._worker.pending_error() is not None:
+            break
+        deadline.wait(0.01)
+    before = g.graduated
+    with pytest.raises(SinkBoom):
+        g.add(np.array([99]), np.zeros((1, 2), dtype=np.float32))
+    # the failed add must not have buffered anything or bumped counters
+    assert g.graduated == before
+    with pytest.raises(SinkBoom):
+        g.flush()
+    with pytest.raises(SinkBoom):
+        g.close()
+
+
+def test_writer_close_flushes_buffered_rows_then_raises(tmp_path, monkeypatch):
+    """close() ordering: buffered rows are spilled to disk first, the
+    deferred writer-thread error is raised after — deterministically."""
+    import repro.storage.writer as writer_mod
+
+    real = writer_mod.write_spill
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise SinkBoom("first spill fails")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(writer_mod, "write_spill", flaky)
+    w = EmbeddingWriter(
+        str(tmp_path / "out"), num_vertices=100, dim=2, dtype=np.float32,
+        num_partitions=2, buffer_rows=4, queue_depth=4, threaded=True,
+    )
+    # partition 1 rows are ingested first and stay buffered (< buffer_rows)
+    w.write(np.array([60, 61], dtype=np.uint64), np.full((2, 2), 7, np.float32))
+    # partition 0 fills -> flush -> first write_spill raises on the thread
+    w.write(np.arange(4, dtype=np.uint64), np.ones((4, 2), dtype=np.float32))
+    with pytest.raises(SinkBoom):
+        w.close()
+    # the buffered partition-1 rows were flushed before the raise
+    assert w.spills.total_rows() >= 2
+    ids, rows = w.spills.read_id_range(60, 62)
+    assert ids.tolist() == [60, 61]
+    assert np.all(rows == 7)
+
+
+def test_writer_close_without_error_flushes_everything(tmp_path):
+    w = EmbeddingWriter(
+        str(tmp_path / "out"), num_vertices=50, dim=3, dtype=np.float32,
+        num_partitions=4, buffer_rows=7, threaded=True,
+    )
+    rng = np.random.default_rng(0)
+    order = rng.permutation(50)
+    rows = rng.standard_normal((50, 3)).astype(np.float32)
+    for s in range(0, 50, 9):
+        ids = order[s : s + 9]
+        w.write(ids.astype(np.uint64), rows[ids])
+    spills = w.close()
+    assert w.rows_written == 50
+    assert np.array_equal(spills_to_dense(spills, 50, 3), rows)
+
+
+# ------------------------------------------------------------ equivalence
+def _run_tail(impl, threaded, out_dir, batches, dim, out_dim, w_buf, g_buf, parts, V):
+    spec = init_gnn_params("gcn", [dim, out_dim], seed=3)[0]
+    from repro.models.gnn import layer_update
+
+    w = EmbeddingWriter(
+        out_dir, num_vertices=V, dim=out_dim, dtype=np.float32,
+        num_partitions=parts, buffer_rows=w_buf, threaded=threaded,
+        ingest_impl=impl,
+    )
+    g = make_graduation(
+        impl, transform=lambda r: layer_update(spec, r), sink=w.write,
+        dim=dim, dtype=np.float32, buffer_rows=g_buf, threaded=threaded,
+    )
+    for ids, rws in batches:
+        g.add(ids, rws)
+    g.close()
+    return w.close()
+
+
+@pytest.mark.parametrize("w_buf,g_buf", [(1, 1), (5, 3), (64, 64)])
+def test_tail_impls_bit_identical(tmp_path, w_buf, g_buf):
+    """Threaded/non-threaded x array/python tails produce bit-identical
+    dense outputs for a random interleaving, including ids straddling
+    partition boundaries and buffer_rows=1."""
+    V, dim, out_dim, parts = 157, 6, 4, 4  # V % parts != 0: uneven ranges
+    rng = np.random.default_rng(w_buf * 31 + g_buf)
+    perm = rng.permutation(V)
+    rows_all = rng.standard_normal((V, dim)).astype(np.float32)
+    batches = []
+    pos = 0
+    while pos < V:
+        n = int(rng.integers(1, 23))
+        ids = perm[pos : pos + n]
+        batches.append((ids.astype(np.int64), rows_all[ids]))
+        pos += n
+    outs = {}
+    for impl in ("array", "python"):
+        for threaded in (True, False):
+            d = tmp_path / f"{impl}_{threaded}"
+            spills = _run_tail(
+                impl, threaded, str(d), batches, dim, out_dim,
+                w_buf, g_buf, parts, V,
+            )
+            outs[(impl, threaded)] = spills_to_dense(spills, V, out_dim)
+    base = outs[("python", False)]
+    for key, out in outs.items():
+        assert np.array_equal(out, base), f"{key} diverged from python oracle"
+
+
+def test_tail_property_random_interleavings(tmp_path_factory):
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        v=st.integers(8, 120),
+        parts=st.integers(1, 5),
+        w_buf=st.integers(1, 40),
+        g_buf=st.integers(1, 40),
+        seed=st.integers(0, 1000),
+    )
+    def check(v, parts, w_buf, g_buf, seed):
+        tmp = tmp_path_factory.mktemp("tail_prop")
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(v)
+        rows_all = rng.standard_normal((v, 5)).astype(np.float32)
+        batches = []
+        pos = 0
+        while pos < v:
+            n = int(rng.integers(1, 17))
+            ids = perm[pos : pos + n]
+            batches.append((ids.astype(np.int64), rows_all[ids]))
+            pos += n
+        outs = []
+        for impl, threaded in (
+            ("python", False), ("python", True),
+            ("array", False), ("array", True),
+        ):
+            d = tmp / f"{impl}_{threaded}"
+            spills = _run_tail(
+                impl, threaded, str(d), batches, 5, 3, w_buf, g_buf, parts, v
+            )
+            outs.append(spills_to_dense(spills, v, 3))
+        for out in outs[1:]:
+            assert np.array_equal(out, outs[0])
+
+    check()
+
+
+def test_add_gather_matches_add():
+    """add_gather(ids, src, idx) must equal add(ids, src[idx]) exactly."""
+    V, dim = 64, 5
+    rng = np.random.default_rng(7)
+    src = rng.standard_normal((32, dim)).astype(np.float32)
+    ids = np.arange(V, dtype=np.int64)
+    perm = rng.permutation(V) % 32
+    sizes = []
+    pos = 0
+    while pos < V:
+        sizes.append(min(int(rng.integers(1, 9)), V - pos))
+        pos += sizes[-1]
+    collected = {}
+    for mode in ("add", "gather"):
+        got = []
+        g = GraduationProcessor(
+            transform=lambda r: r + 1,
+            sink=lambda i, r: got.append((i.copy(), r.copy())),
+            dim=dim, dtype=np.float32, buffer_rows=6, threaded=False,
+        )
+        pos = 0
+        for n in sizes:
+            if mode == "add":
+                g.add(ids[pos : pos + n], src[perm[pos : pos + n]])
+            else:
+                g.add_gather(ids[pos : pos + n], src, perm[pos : pos + n])
+            pos += n
+        g.close()
+        collected[mode] = got
+    a, b = collected["add"], collected["gather"]
+    assert len(a) == len(b)
+    for (ia, ra), (ib, rb) in zip(a, b):
+        assert np.array_equal(ia, ib)
+        assert np.array_equal(ra, rb)
+
+
+# --------------------------------------------------------- engine-level
+def test_engine_failed_layer_does_not_leak_tail_threads(tmp_path, monkeypatch):
+    """A spill failure mid-layer must propagate AND shut down both
+    offload threads plus the cold-store fd (no leak across retries)."""
+    import repro.storage.writer as writer_mod
+
+    def boom(*a, **kw):
+        raise SinkBoom("disk full")
+
+    monkeypatch.setattr(writer_mod, "write_spill", boom)
+    V, D = 400, 8
+    csr = powerlaw_graph(V, 5, seed=5)
+    feats = make_features(V, D, seed=5)
+    specs = init_gnn_params("gcn", [D, 4], seed=5)
+    store = build_store(tmp_path, csr, feats)
+    cfg = AtlasConfig(chunk_bytes=40 * D * 4, hot_slots=V,
+                      spill_buffer_rows=16, graduation_rows=16)
+    with pytest.raises(SinkBoom):
+        AtlasEngine(cfg).run(store, specs, str(tmp_path / "work"))
+    for _ in range(100):
+        names = {t.name for t in threading.enumerate()}
+        if "atlas-graduate" not in names and "atlas-writer" not in names:
+            break
+        threading.Event().wait(0.05)
+    names = {t.name for t in threading.enumerate()}
+    assert "atlas-graduate" not in names
+    assert "atlas-writer" not in names
+
+
+def test_engine_tail_impls_bit_identical(tmp_path):
+    """Full engine under heavy eviction: tail_impl array == python."""
+    V, D = 900, 12
+    csr = powerlaw_graph(V, 5, seed=41)
+    feats = make_features(V, D, seed=41)
+    specs = init_gnn_params("gcn", [D, 6], seed=9)
+    ref = dense_reference(csr, feats, specs)
+    outs = {}
+    for tail in ("array", "python"):
+        store = build_store(tmp_path / tail, csr, feats)
+        cfg = AtlasConfig(
+            chunk_bytes=40 * D * 4, hot_slots=V // 8, eviction="at",
+            tail_impl=tail, graduation_rows=97, spill_buffer_rows=53,
+        )
+        spills, metrics = AtlasEngine(cfg).run(
+            store, specs, str(tmp_path / f"work_{tail}")
+        )
+        outs[tail] = spills_to_dense(spills, V, 6)
+        assert metrics[0].evictions > 0
+        assert metrics[0].tail_seconds >= 0.0
+    assert np.array_equal(outs["array"], outs["python"])
+    assert np.abs(outs["array"] - ref).max() < 1e-4
