@@ -34,6 +34,7 @@ from repro.core.orchestrator import Orchestrator
 from repro.graphs.csr import degrees_from_csr
 from repro.graphs.synth import make_features, powerlaw_graph
 from repro.models.gnn import init_gnn_params
+from repro.session import AtlasSession
 from repro.storage.layout import GraphStore
 
 
@@ -146,9 +147,11 @@ def run_engine(
     )
     with tempfile.TemporaryDirectory() as td:
         store = GraphStore.create(td + "/store", csr, feats, num_partitions=4)
+        session = AtlasSession(store, config=cfg, workdir=td + "/work")
         t0 = time.perf_counter()
-        spills, metrics = AtlasEngine(cfg).run(store, specs, td + "/work")
+        result = session.infer(specs)
         seconds = time.perf_counter() - t0
+        spills, metrics = result.final.spills, result.metrics
         out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
     m = metrics[0]
     return {

@@ -1,19 +1,29 @@
-"""Serving-path benchmark: batched vertex lookups against a servable layer.
+"""Serving-path benchmark: batched vertex lookups against published layers.
 
 Builds an engine-shaped spill set (every vertex exactly once, scattered
-across overlapping sorted files), compacts it into block-indexed servable
-files, then measures the ``VertexQueryEngine`` under uniform and Zipfian
-batched workloads across a sweep of page-cache budgets (0 = cache
-disabled).  Reports queries/s, rows/s, cache hit rate, and disk blocks
-read, as JSON with ``--json``.
+across overlapping sorted files), publishes it through the
+``AtlasSession`` lifecycle (versioned compaction into block-indexed
+servable files), then measures pinned ``session.reader`` lookups under
+uniform and Zipfian batched workloads across a sweep of page-cache
+budgets (0 = cache disabled).  Reports queries/s, rows/s, cache hit
+rate, and disk blocks read, as JSON with ``--json``.
+
+``--concurrent N`` switches to the MVCC smoke mode instead: N reader
+threads hammer ``session.reader(...).lookup`` while the main thread
+re-publishes the layer in a loop with alternating row contents; every
+batch is checked bit-for-bit against the reader's pinned version, so any
+mixed-version or missing row fails the run.
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_serve.py                # 1M rows
     PYTHONPATH=src python benchmarks/bench_serve.py --vertices 200000 \
         --batches 500 --cache-mb 0,16 --json out.json              # CI scale
+    PYTHONPATH=src python benchmarks/bench_serve.py --vertices 50000 \
+        --concurrent 4 --publishes 8 --json concurrent.json        # smoke
 
-Acceptance target (ISSUE 2): >= 10x throughput for a Zipfian workload
-with a warm cache vs cache disabled on a >= 1M-vertex store.
+Acceptance targets: >= 10x throughput for a Zipfian workload with a warm
+cache vs cache disabled on a >= 1M-vertex store (ISSUE 2); zero
+mixed-version rows under concurrent re-publication (ISSUE 4).
 """
 
 from __future__ import annotations
@@ -22,62 +32,61 @@ import argparse
 import json
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
 
-from repro.serve_gnn import ServableLayer, ShardedPageCache, VertexQueryEngine
-from repro.serve_gnn.servable import compact_spills
+from repro.graphs.csr import CSRGraph
+from repro.session import AtlasSession
 from repro.storage.iostats import IOStats
+from repro.storage.layout import GraphStore
 from repro.storage.spill import SpillSet, write_spill
 
+SERVE_LAYER = 1  # the layer number the benchmark publishes under
 
-def build_servable(
-    root: str,
-    vertices: int,
-    dim: int,
-    raw_files: int,
-    rows_per_file: int,
-    block_rows: int,
-    seed: int,
-) -> tuple[list[str], dict]:
-    """Write an overlapping raw spill set, then compact it — the same path
-    ``GraphStore.register_servable_layer`` runs on engine output."""
+
+def build_spillset(
+    root: str, vertices: int, dim: int, raw_files: int, seed: int, shift: float = 0.0
+) -> tuple[SpillSet, np.ndarray]:
+    """Write an overlapping raw spill set — the same shape the engine
+    leaves behind.  ``shift`` offsets every row so alternating publishes
+    are distinguishable bit-for-bit."""
     rng = np.random.default_rng(seed)
     rows = rng.standard_normal((vertices, dim)).astype(np.float32)
+    if shift:
+        rows += np.float32(shift)
     perm = rng.permutation(vertices)
-    raw_dir = os.path.join(root, "raw")
-    os.makedirs(raw_dir, exist_ok=True)
+    os.makedirs(root, exist_ok=True)
     ss = SpillSet()
     bounds = np.linspace(0, vertices, raw_files + 1).astype(int)
-    t0 = time.perf_counter()
     for i in range(raw_files):
         sel = perm[bounds[i] : bounds[i + 1]]
         ss.add(
             write_spill(
-                os.path.join(raw_dir, f"raw{i:03d}.spill"),
+                os.path.join(root, f"raw{i:03d}.spill"),
                 sel.astype(np.uint64),
                 rows[sel],
             )
         )
-    write_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    stats = IOStats()
-    paths = compact_spills(
-        ss,
-        os.path.join(root, "servable"),
-        rows_per_file=rows_per_file,
-        block_rows=block_rows,
-        stats=stats,
+    return ss, rows
+
+
+def make_session(root: str, vertices: int) -> AtlasSession:
+    """A serving-only session over a minimal store (trivial topology,
+    1-wide zero features): the benchmark publishes raw spill sets, so no
+    engine run is involved."""
+    csr = CSRGraph(
+        indptr=np.zeros(vertices + 1, dtype=np.int64),
+        indices=np.empty(0, dtype=np.int64),
     )
-    meta = {
-        "raw_write_s": round(write_s, 2),
-        "compact_s": round(time.perf_counter() - t0, 2),
-        "compact_bytes_read": stats.bytes_read,
-        "compact_bytes_written": stats.bytes_written,
-        "servable_files": len(paths),
-    }
-    return paths, meta
+    store = GraphStore.create(
+        os.path.join(root, "store"),
+        csr,
+        np.zeros((vertices, 1), dtype=np.float32),
+        num_partitions=1,
+    )
+    return AtlasSession(store, workdir=os.path.join(root, "run"))
 
 
 def make_workload(
@@ -94,40 +103,136 @@ def make_workload(
 
 
 def run_workload(
-    paths: list[str],
-    block_rows: int,
+    session: AtlasSession,
     queries: np.ndarray,
     cache_bytes: int,
     num_shards: int,
     warm_batches: int,
 ) -> dict:
-    layer = ServableLayer.open(paths, block_rows=block_rows)
-    cache = (
-        ShardedPageCache(layer.num_blocks, cache_bytes, num_shards=num_shards)
-        if cache_bytes > 0
-        else None
-    )
-    eng = VertexQueryEngine(layer, cache=cache)
-    for q in queries[:warm_batches]:
-        eng.lookup(q)
-    timed = queries[warm_batches:]
+    with session.reader(
+        SERVE_LAYER, cache_bytes=cache_bytes, num_shards=num_shards
+    ) as eng:
+        for q in queries[:warm_batches]:
+            eng.lookup(q)
+        timed = queries[warm_batches:]
+        t0 = time.perf_counter()
+        for q in timed:
+            eng.lookup(q)
+        seconds = time.perf_counter() - t0
+        rec = {
+            "cache_mb": cache_bytes / (1 << 20),
+            "batches": len(timed),
+            "batch": queries.shape[1],
+            "seconds": round(seconds, 4),
+            "queries_per_s": round(len(timed) / seconds, 1),
+            "rows_per_s": round(len(timed) * queries.shape[1] / seconds, 1),
+            "disk_blocks_read": eng.blocks_read,
+            "disk_bytes_read": eng.stats.bytes_read,
+            "version": eng.version,
+        }
+        if eng.cache is not None:
+            rec["hit_rate"] = round(eng.cache.hit_rate(), 4)
+            rec["resident_mb"] = round(eng.cache.resident_bytes / (1 << 20), 2)
+    return rec
+
+
+# --------------------------------------------------------------------------
+# Concurrent smoke mode (ISSUE 4): readers hammer session.reader during a
+# re-publish loop; every batch must be bit-identical to the reader's pinned
+# version — never mixed, never missing.
+# --------------------------------------------------------------------------
+
+
+def run_concurrent(
+    session: AtlasSession,
+    spillsets: list[SpillSet],
+    refs: list[np.ndarray],
+    args,
+) -> dict:
+    vertices = refs[0].shape[0]
+    stop = threading.Event()
+    errors: list[str] = []
+    lookups = [0] * args.concurrent
+    rows_checked = [0] * args.concurrent
+
+    def expected(version: int) -> np.ndarray:
+        # publish i (1-based epoch) carries variant (epoch-1) % len(refs)
+        return refs[(version - 1) % len(refs)]
+
+    def reader_loop(ti: int) -> None:
+        rng = np.random.default_rng(1000 + ti)
+        try:
+            while not stop.is_set():
+                with session.reader(
+                    SERVE_LAYER,
+                    cache_bytes=int(args.cache_mb_concurrent * (1 << 20)),
+                    num_shards=args.shards,
+                ) as eng:
+                    ref = expected(eng.version)
+                    for _ in range(args.batches_per_open):
+                        q = rng.integers(0, vertices, size=args.batch)
+                        got = eng.lookup(q)
+                        if not np.array_equal(got, ref[q]):
+                            errors.append(
+                                f"reader {ti}: rows diverged from pinned "
+                                f"version v{eng.version}"
+                            )
+                            stop.set()
+                            return
+                        lookups[ti] += 1
+                        rows_checked[ti] += len(q)
+        except Exception as e:  # noqa: BLE001 - smoke harness surfaces all
+            errors.append(f"reader {ti}: {type(e).__name__}: {e}")
+            stop.set()
+
+    # first publish before readers start so version 1 exists
+    session.publish(SERVE_LAYER, spills=spillsets[0],
+                    block_rows=args.block_rows,
+                    rows_per_file=args.rows_per_file)
+    threads = [
+        threading.Thread(target=reader_loop, args=(ti,), daemon=True)
+        for ti in range(args.concurrent)
+    ]
     t0 = time.perf_counter()
-    for q in timed:
-        eng.lookup(q)
+    for t in threads:
+        t.start()
+    gc_removed = 0
+    publishes = 1
+    for i in range(1, args.publishes):
+        if stop.is_set():
+            break
+        pub = session.publish(
+            SERVE_LAYER,
+            spills=spillsets[i % len(spillsets)],
+            block_rows=args.block_rows,
+            rows_per_file=args.rows_per_file,
+        )
+        publishes += 1
+        gc_removed += len(pub.gc_removed)
+    # let readers run a beat against the final version before stopping
+    time.sleep(args.drain_seconds)
+    stop.set()
+    for ti, t in enumerate(threads):
+        t.join(timeout=60)
+        if t.is_alive():
+            errors.append(f"reader {ti} failed to stop (possible deadlock)")
     seconds = time.perf_counter() - t0
+    gc_removed += len(session.gc(SERVE_LAYER))
     rec = {
-        "cache_mb": cache_bytes / (1 << 20),
-        "batches": len(timed),
-        "batch": queries.shape[1],
-        "seconds": round(seconds, 4),
-        "queries_per_s": round(len(timed) / seconds, 1),
-        "rows_per_s": round(len(timed) * queries.shape[1] / seconds, 1),
-        "disk_blocks_read": eng.blocks_read,
-        "disk_bytes_read": eng.stats.bytes_read,
+        "readers": args.concurrent,
+        "publishes": publishes,
+        "seconds": round(seconds, 3),
+        "lookups": int(sum(lookups)),
+        "rows_checked": int(sum(rows_checked)),
+        "queries_per_s": round(sum(lookups) / seconds, 1),
+        "versions_gc_removed": gc_removed,
+        "versions_remaining": session.store.servable_versions(SERVE_LAYER),
+        "errors": errors,
     }
-    if cache is not None:
-        rec["hit_rate"] = round(cache.hit_rate(), 4)
-        rec["resident_mb"] = round(cache.resident_bytes / (1 << 20), 2)
+    if errors:
+        raise AssertionError(f"concurrent serving smoke failed: {errors}")
+    if not sum(lookups):
+        raise AssertionError("concurrent serving smoke performed no lookups")
     return rec
 
 
@@ -147,53 +252,103 @@ def main():
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--workloads", default="zipf,uniform")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--concurrent", type=int, default=0, metavar="N",
+                    help="smoke mode: N reader threads during a re-publish "
+                         "loop (skips the cache sweep)")
+    ap.add_argument("--publishes", type=int, default=8,
+                    help="re-publications in --concurrent mode")
+    ap.add_argument("--batches-per-open", type=int, default=20,
+                    help="lookups per pinned reader in --concurrent mode")
+    ap.add_argument("--cache-mb-concurrent", type=float, default=8.0,
+                    help="per-reader cache budget in --concurrent mode")
+    ap.add_argument("--drain-seconds", type=float, default=1.0,
+                    help="reader time against the final version before stop")
     ap.add_argument("--json", default=None, help="write results to this path")
     args = ap.parse_args()
 
-    budgets = [float(x) for x in args.cache_mb.split(",")]
     results = {
         "config": {
             k: getattr(args, k)
             for k in ("vertices", "dim", "block_rows", "batch", "batches",
-                      "warm_batches", "zipf_alpha", "shards")
+                      "warm_batches", "zipf_alpha", "shards", "concurrent",
+                      "publishes")
         }
     }
     with tempfile.TemporaryDirectory() as td:
-        print(f"building servable store: V={args.vertices} d={args.dim} "
-              f"({args.vertices * args.dim * 4 >> 20} MiB rows)")
-        paths, meta = build_servable(
-            td, args.vertices, args.dim, args.raw_files,
-            args.rows_per_file, args.block_rows, args.seed,
-        )
-        results["build"] = meta
-        print(f"  raw write {meta['raw_write_s']}s, "
-              f"compaction {meta['compact_s']}s -> {meta['servable_files']} files")
-        for kind in args.workloads.split(","):
-            queries = make_workload(
-                kind, args.vertices, args.batches + args.warm_batches,
-                args.batch, args.zipf_alpha, args.seed + 1,
-            )
-            rows = []
-            for mb in budgets:
-                rec = run_workload(
-                    paths, args.block_rows, queries, int(mb * (1 << 20)),
-                    args.shards, args.warm_batches,
+        session = make_session(td, args.vertices)
+        if args.concurrent > 0:
+            print(f"concurrent smoke: V={args.vertices} d={args.dim} "
+                  f"{args.concurrent} readers x {args.publishes} publishes")
+            variants = []
+            refs = []
+            for k in range(2):
+                ss, rows = build_spillset(
+                    os.path.join(td, f"raw{k}"), args.vertices, args.dim,
+                    args.raw_files, args.seed, shift=float(k),
                 )
-                rows.append(rec)
-                extra = (f"hit_rate={rec['hit_rate']}" if "hit_rate" in rec
-                         else "cache off")
-                print(f"  {kind:<8} cache={mb:6.1f}MiB  "
-                      f"{rec['queries_per_s']:>10.1f} q/s  "
-                      f"{rec['rows_per_s']:>12.1f} rows/s  "
-                      f"blocks_read={rec['disk_blocks_read']:<8d} {extra}")
-            results[kind] = rows
-            base = next((r for r in rows if r["cache_mb"] == 0), None)
-            best = max(rows, key=lambda r: r["queries_per_s"])
-            if base is not None and best is not base:
-                speedup = best["queries_per_s"] / base["queries_per_s"]
-                results[f"{kind}_speedup_vs_no_cache"] = round(speedup, 2)
-                print(f"  {kind}: warm-cache speedup vs cache-off: "
-                      f"{speedup:.1f}x")
+                variants.append(ss)
+                refs.append(rows)
+            rec = run_concurrent(session, variants, refs, args)
+            results["concurrent"] = rec
+            print(f"  {rec['lookups']} lookups ({rec['rows_checked']} rows "
+                  f"bit-checked) across {rec['publishes']} publishes in "
+                  f"{rec['seconds']}s -> {rec['queries_per_s']} q/s, "
+                  f"{rec['versions_gc_removed']} stale versions GC'd, "
+                  f"remaining {rec['versions_remaining']}")
+        else:
+            print(f"building servable store: V={args.vertices} d={args.dim} "
+                  f"({args.vertices * args.dim * 4 >> 20} MiB rows)")
+            t0 = time.perf_counter()
+            ss, _ = build_spillset(
+                os.path.join(td, "raw"), args.vertices, args.dim,
+                args.raw_files, args.seed,
+            )
+            write_s = time.perf_counter() - t0
+            stats = IOStats()
+            t0 = time.perf_counter()
+            pub = session.publish(
+                SERVE_LAYER, spills=ss, rows_per_file=args.rows_per_file,
+                block_rows=args.block_rows, stats=stats,
+            )
+            results["build"] = {
+                "raw_write_s": round(write_s, 2),
+                "compact_s": round(time.perf_counter() - t0, 2),
+                "compact_bytes_read": stats.bytes_read,
+                "compact_bytes_written": stats.bytes_written,
+                "servable_files": len(pub.files),
+                "version": pub.epoch,
+            }
+            print(f"  raw write {write_s:.2f}s, compaction "
+                  f"{results['build']['compact_s']}s -> {len(pub.files)} files "
+                  f"(version v{pub.epoch})")
+            budgets = [float(x) for x in args.cache_mb.split(",")]
+            for kind in args.workloads.split(","):
+                queries = make_workload(
+                    kind, args.vertices, args.batches + args.warm_batches,
+                    args.batch, args.zipf_alpha, args.seed + 1,
+                )
+                rows = []
+                for mb in budgets:
+                    rec = run_workload(
+                        session, queries, int(mb * (1 << 20)),
+                        args.shards, args.warm_batches,
+                    )
+                    rows.append(rec)
+                    extra = (f"hit_rate={rec['hit_rate']}" if "hit_rate" in rec
+                             else "cache off")
+                    print(f"  {kind:<8} cache={mb:6.1f}MiB  "
+                          f"{rec['queries_per_s']:>10.1f} q/s  "
+                          f"{rec['rows_per_s']:>12.1f} rows/s  "
+                          f"blocks_read={rec['disk_blocks_read']:<8d} {extra}")
+                results[kind] = rows
+                base = next((r for r in rows if r["cache_mb"] == 0), None)
+                best = max(rows, key=lambda r: r["queries_per_s"])
+                if base is not None and best is not base:
+                    speedup = best["queries_per_s"] / base["queries_per_s"]
+                    results[f"{kind}_speedup_vs_no_cache"] = round(speedup, 2)
+                    print(f"  {kind}: warm-cache speedup vs cache-off: "
+                          f"{speedup:.1f}x")
+        session.close()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

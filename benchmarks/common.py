@@ -12,9 +12,10 @@ import time
 
 import numpy as np
 
-from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.core.atlas import AtlasConfig, spills_to_dense
 from repro.graphs.synth import make_features, powerlaw_graph
 from repro.models.gnn import init_gnn_params
+from repro.session import AtlasSession
 from repro.storage.layout import GraphStore
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
@@ -31,11 +32,11 @@ def run_atlas(tmpdir, csr, feats, specs, cfg: AtlasConfig):
         os.path.join(tmpdir, "store"), csr, feats, num_partitions=cfg.num_partitions
     )
     t0 = time.perf_counter()
-    engine = AtlasEngine(cfg)
-    spills, metrics = engine.run(store, specs, os.path.join(tmpdir, "work"))
+    session = AtlasSession(store, config=cfg, workdir=os.path.join(tmpdir, "work"))
+    result = session.infer(specs)
     wall = time.perf_counter() - t0
-    out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
-    return out, metrics, wall
+    out = spills_to_dense(result.final.spills, csr.num_vertices, specs[-1].out_dim)
+    return out, result.metrics, wall
 
 
 def gnn_specs(kind: str, d_in: int, hidden=32, out=16, seed=3):

@@ -2,7 +2,8 @@
 
 Builds a synthetic heavy-tailed graph whose features live on disk, runs
 the broadcast-based OOC engine layer by layer under a tight memory
-budget, and checks the result against the in-memory oracle.
+budget via the ``AtlasSession`` lifecycle API (infer → publish →
+reader), and checks the result against the in-memory oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,11 +12,11 @@ import tempfile
 
 import numpy as np
 
-from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.core.atlas import AtlasConfig, spills_to_dense
 from repro.core.reorder import make_order, relabel_features_chunked, relabel_graph
 from repro.graphs.synth import make_features, powerlaw_graph
 from repro.models.gnn import dense_reference, init_gnn_params
-from repro.serve_gnn import ServableLayer, ShardedPageCache, VertexQueryEngine
+from repro.session import AtlasSession
 from repro.storage.layout import GraphStore
 
 
@@ -38,22 +39,25 @@ def main():
             hot_slots=6_000,  # deliberately tight: forces evict/reload
             eviction="at",  # min-pending-messages policy
         )
-        engine = AtlasEngine(cfg)
-        spills, metrics = engine.run(store, specs, f"{td}/work")
-        out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
+        with AtlasSession(store, config=cfg) as session:
+            result = session.infer(specs)
+            final = result.final
+            out = spills_to_dense(final.spills, csr.num_vertices, final.dim)
 
-        # serving: point/batch lookups straight from the spill set — no
-        # dense [V, d] materialisation (docs/serving.md,
-        # examples/serve_embeddings.py)
-        store.register_servable_layer(len(specs), spills)
-        layer = ServableLayer.from_store(store, len(specs))
-        qe = VertexQueryEngine(
-            layer, cache=ShardedPageCache(layer.num_blocks, budget_bytes=2 << 20)
-        )
-        sample = np.random.default_rng(0).integers(0, v, size=256)
-        assert np.array_equal(qe.lookup(sample), out[sample].astype(layer.dtype))
-        print(f"== served {len(sample)} lookups "
-              f"({qe.blocks_read} cold block reads)")
+            # serving: publish the final layer as an immutable versioned
+            # servable, then point/batch lookups straight from it — no
+            # dense [V, d] materialisation (docs/session_api.md,
+            # docs/serving.md, examples/serve_embeddings.py)
+            published = session.publish(final)
+            with session.reader(final.layer, cache_bytes=2 << 20) as reader:
+                sample = np.random.default_rng(0).integers(0, v, size=256)
+                got = reader.lookup(sample)
+                assert np.array_equal(got, out[sample].astype(got.dtype))
+                print(
+                    f"== served {len(sample)} lookups from version "
+                    f"v{published.epoch} ({reader.blocks_read} cold block reads)"
+                )
+        metrics = result.metrics
 
     for m in metrics:
         print(

@@ -1,9 +1,13 @@
 """Serve final-layer GNN embeddings straight from the engine's spill set.
 
-Runs the out-of-core engine on a synthetic graph, registers the final
-layer as *servable* (one-time compaction into block-indexed files), and
-answers batched vertex queries through the sharded page cache — without
-ever materialising the dense [V, d] embedding matrix.
+Runs the out-of-core engine, publishes the final layer as an
+epoch-numbered *servable version* (one-time compaction into
+block-indexed files), and answers batched vertex queries through the
+sharded page cache — without ever materialising the dense [V, d]
+embedding matrix.  Then demonstrates the versioning contract: a reader
+opened before a re-publish keeps serving its pinned version
+bit-identically, and the stale version is garbage-collected once the
+reader closes.
 
     PYTHONPATH=src python examples/serve_embeddings.py
 """
@@ -13,10 +17,10 @@ import time
 
 import numpy as np
 
-from repro.core.atlas import AtlasConfig, AtlasEngine
+from repro.core.atlas import AtlasConfig
 from repro.graphs.synth import make_features, powerlaw_graph
 from repro.models.gnn import init_gnn_params
-from repro.serve_gnn import ServableLayer, ShardedPageCache, VertexQueryEngine
+from repro.session import AtlasSession
 from repro.storage.layout import GraphStore
 
 
@@ -29,41 +33,51 @@ def main():
 
     with tempfile.TemporaryDirectory() as td:
         store = GraphStore.create(f"{td}/store", csr, feats, num_partitions=4)
-        spills, _ = AtlasEngine(AtlasConfig(chunk_bytes=1 << 20)).run(
-            store, specs, f"{td}/work"
-        )
+        with AtlasSession(store, config=AtlasConfig(chunk_bytes=1 << 20)) as session:
+            result = session.infer(specs)
+            final = result.final
 
-        print("== registering final layer as servable (compaction + block index)")
-        t0 = time.perf_counter()
-        store.register_servable_layer(
-            len(specs), spills, block_rows=1024, rows_per_file=1 << 16
-        )
-        print(f"   compacted in {time.perf_counter() - t0:.2f}s")
+            print("== publishing final layer (compaction + block index)")
+            t0 = time.perf_counter()
+            published = session.publish(
+                final, block_rows=1024, rows_per_file=1 << 16
+            )
+            print(f"   version v{published.epoch} compacted in "
+                  f"{time.perf_counter() - t0:.2f}s")
 
-        layer = ServableLayer.from_store(store, len(specs))
-        cache = ShardedPageCache(
-            layer.num_blocks, budget_bytes=4 << 20, num_shards=4
-        )
-        engine = VertexQueryEngine(layer, cache=cache)
+            reader = session.reader(final.layer, cache_bytes=4 << 20)
+            rng = np.random.default_rng(0)
+            print("== serving: 2000 Zipfian batches of 64 vertex lookups")
+            queries = (rng.zipf(1.1, size=(2000, 64)) - 1) % v
+            t0 = time.perf_counter()
+            for q in queries:
+                reader.lookup(q)
+            dt = time.perf_counter() - t0
+            print(
+                f"   {len(queries) / dt:,.0f} queries/s "
+                f"({len(queries) * 64 / dt:,.0f} rows/s), "
+                f"hit rate {reader.cache.hit_rate():.1%}, "
+                f"{reader.blocks_read} disk block reads"
+            )
 
-        rng = np.random.default_rng(0)
-        print("== serving: 2000 Zipfian batches of 64 vertex lookups")
-        queries = (rng.zipf(1.1, size=(2000, 64)) - 1) % v
-        t0 = time.perf_counter()
-        for q in queries:
-            engine.lookup(q)
-        dt = time.perf_counter() - t0
-        print(
-            f"   {len(queries) / dt:,.0f} queries/s "
-            f"({len(queries) * 64 / dt:,.0f} rows/s), "
-            f"hit rate {cache.hit_rate():.1%}, "
-            f"{engine.blocks_read} disk block reads"
-        )
+            # a point lookup returns the exact engine output row
+            vid = int(rng.integers(0, v))
+            row = reader.lookup(np.array([vid]))[0]
+            print(f"   embedding[{vid}][:4] = {np.round(row[:4], 4)}")
 
-        # a point lookup returns the exact engine output row
-        vid = int(rng.integers(0, v))
-        row = engine.lookup(np.array([vid]))[0]
-        print(f"   embedding[{vid}][:4] = {np.round(row[:4], 4)}")
+            # versioned re-publish: the open reader keeps its pinned
+            # version; a fresh reader sees the new epoch; the stale
+            # version is GC'd only once unpinned
+            repub = session.publish(final, block_rows=2048)
+            assert np.array_equal(reader.lookup(np.array([vid]))[0], row)
+            with session.reader(final.layer) as fresh:
+                assert fresh.version == repub.epoch
+                assert np.array_equal(fresh.lookup(np.array([vid]))[0], row)
+            print(f"== re-published as v{repub.epoch}; reader pinned to "
+                  f"v{reader.version} kept serving identical rows")
+            reader.close()
+            gone = session.publish(final).gc_removed
+            print(f"== stale versions GC'd on next publish: {list(gone)}")
     print("== OK")
 
 

@@ -9,20 +9,21 @@ Pipeline per layer (Fig 3):
     sorted spill files  ◀──writer thread── graduation offload thread
     of layer l-1                               (dense transform)
 
-Fault tolerance: a layer is a transaction.  The manifest records completed
-layers and their spill files; a crash mid-layer discards that layer's
-partial spills on resume and replays it from the (immutable) previous
-layer.  See ``run(..., resume=True)`` and
+Fault tolerance: a layer is a transaction.  The run manifest records
+completed layers and their spill files; a crash mid-layer discards that
+layer's partial spills on resume and replays it from the (immutable)
+previous layer.  The run loop itself lives in
+``repro.session.AtlasSession.infer`` (``AtlasEngine.run`` is a
+deprecation shim over it); see
 tests/test_atlas_engine.py::test_resume_after_simulated_crash.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
-import shutil
 import time
+import warnings
 
 import numpy as np
 
@@ -31,7 +32,6 @@ from repro.core.eviction import make_policy
 from repro.core.graduation import GraduationProcessor, make_graduation
 from repro.core.memory_manager import MemoryManager
 from repro.core.orchestrator import Orchestrator
-from repro.graphs.csr import degrees_from_csr
 from repro.models.gnn import (
     GNNLayerSpec,
     edge_weights,
@@ -42,7 +42,7 @@ from repro.storage.coldstore import ColdStore
 from repro.storage.iostats import IOStats
 from repro.storage.layout import GraphStore
 from repro.storage.reader import ChunkReader
-from repro.storage.spill import SpillFile, SpillSet
+from repro.storage.spill import SpillSet
 from repro.storage.writer import EmbeddingWriter
 
 
@@ -115,43 +115,20 @@ class AtlasEngine:
         workdir: str,
         resume: bool = False,
     ) -> tuple[SpillSet, list[LayerMetrics]]:
-        os.makedirs(workdir, exist_ok=True)
-        manifest_path = os.path.join(workdir, "run_manifest.json")
-        manifest = {"completed_layers": 0, "spills": {}}
-        if resume and os.path.exists(manifest_path):
-            with open(manifest_path) as f:
-                manifest = json.load(f)
+        """Deprecated: use ``repro.session.AtlasSession.infer``, which owns
+        the run manifest and returns a typed ``RunResult`` (this shim keeps
+        the raw-tuple contract for pre-session callers)."""
+        warnings.warn(
+            "AtlasEngine.run is deprecated; use "
+            "repro.session.AtlasSession.infer",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.session import AtlasSession
 
-        csr = store.topology()
-        in_deg, _ = degrees_from_csr(csr)
-        metrics: list[LayerMetrics] = []
-        spills = store.layer0_spills()
-        done = manifest["completed_layers"]
-        if done:
-            spills = SpillSet()
-            for p in manifest["spills"][str(done)]:
-                spills.add(SpillFile.open(p))
-
-        for l in range(done, len(specs)):
-            spec = specs[l]
-            # discard partial output of a crashed attempt at this layer
-            out_dir = os.path.join(workdir, f"layer_{l + 1}")
-            if os.path.exists(out_dir):
-                shutil.rmtree(out_dir)
-            layer_spills, m = self.run_layer(
-                csr, in_deg, spills, spec, out_dir, layer_index=l
-            )
-            metrics.append(m)
-            if self.config.delete_intermediate and l > 0:
-                spills.delete_all()
-            spills = layer_spills
-            manifest["completed_layers"] = l + 1
-            manifest["spills"][str(l + 1)] = [f.path for f in spills.files]
-            tmp = manifest_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(manifest, f)
-            os.replace(tmp, manifest_path)
-        return spills, metrics
+        session = AtlasSession(store, workdir=workdir, engine=self)
+        result = session.infer(specs, resume=resume)
+        return result.final.spills, result.metrics
 
     # --------------------------------------------------------------- layer
     def run_layer(

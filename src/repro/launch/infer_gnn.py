@@ -16,10 +16,11 @@ import time
 
 import numpy as np
 
-from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.core.atlas import AtlasConfig, spills_to_dense
 from repro.core.reorder import make_order, relabel_features_chunked, relabel_graph
 from repro.graphs.synth import make_features, powerlaw_graph
 from repro.models.gnn import dense_reference, init_gnn_params
+from repro.session import AtlasSession
 from repro.storage.layout import GraphStore
 
 
@@ -36,6 +37,8 @@ def main():
     ap.add_argument("--reorder", default="at", choices=["og", "rnd", "at"])
     ap.add_argument("--eviction", default="at", choices=["at", "lru", "rnd"])
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--serve", action="store_true",
+                    help="publish the final layer and sanity-serve lookups")
     ap.add_argument("--workdir", default=None)
     args = ap.parse_args()
 
@@ -58,21 +61,33 @@ def main():
         cfg = AtlasConfig(chunk_bytes=args.chunk_mib << 20,
                           hot_bytes=args.hot_mib << 20,
                           eviction=args.eviction)
-        t0 = time.time()
-        spills, metrics = AtlasEngine(cfg).run(store, specs, f"{wd}/work")
-        wall = time.time() - t0
-        for m in metrics:
-            print(f"[infer-gnn] layer {m.layer}: {m.seconds:.1f}s "
-                  f"read={m.bytes_read >> 20}MiB evict={m.evictions} "
-                  f"reload={m.reloads}")
-        print(f"[infer-gnn] total {wall:.1f}s for "
-              f"{csr.num_vertices} vertices / {csr.num_edges} edges")
-        if args.verify:
-            out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
-            ref = dense_reference(csr, feats, specs)
-            err = np.abs(out - ref).max(axis=1).mean()
-            print(f"[infer-gnn] mean-max-abs vs reference: {err:.2e}")
-            assert err < 1e-4
+        with AtlasSession(store, config=cfg, workdir=f"{wd}/work") as session:
+            t0 = time.time()
+            result = session.infer(specs)
+            wall = time.time() - t0
+            for m in result.metrics:
+                print(f"[infer-gnn] layer {m.layer}: {m.seconds:.1f}s "
+                      f"read={m.bytes_read >> 20}MiB evict={m.evictions} "
+                      f"reload={m.reloads}")
+            print(f"[infer-gnn] total {wall:.1f}s for "
+                  f"{csr.num_vertices} vertices / {csr.num_edges} edges")
+            final = result.final
+            if args.verify:
+                out = spills_to_dense(final.spills, csr.num_vertices, final.dim)
+                ref = dense_reference(csr, feats, specs)
+                err = np.abs(out - ref).max(axis=1).mean()
+                print(f"[infer-gnn] mean-max-abs vs reference: {err:.2e}")
+                assert err < 1e-4
+            if args.serve:
+                published = session.publish(final)
+                with session.reader(final.layer, cache_bytes=8 << 20) as reader:
+                    sample = np.random.default_rng(0).integers(
+                        0, csr.num_vertices, size=1024
+                    )
+                    rows = reader.lookup(sample)
+                    print(f"[infer-gnn] served {len(rows)} lookups from "
+                          f"version v{published.epoch} "
+                          f"({reader.blocks_read} cold block reads)")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,22 @@
 """Out-of-core embedding serving: the read-side counterpart of the ATLAS
 inference engine (docs/serving.md).
 
-``AtlasEngine.run`` produces sorted spill files; this package turns them
-into a queryable on-disk store without ever materialising the dense
-[V, d] matrix:
+The engine produces sorted spill files; this package turns them into a
+queryable on-disk store without ever materialising the dense [V, d]
+matrix:
 
-* ``compact_spills`` / ``GraphStore.register_servable_layer`` — one-time
-  merge into disjoint block-indexed servable files,
-* ``ServableLayer`` — the opened read view (file + block binary search),
+* ``compact_spills`` / ``GraphStore.publish_servable_layer`` — one-time
+  merge into disjoint block-indexed servable files under an immutable
+  epoch-numbered version directory,
+* ``ServableLayer`` — the opened read view of one version (file + block
+  binary search, mmapped id columns),
 * ``ShardedPageCache`` — memory-budgeted LRU over decoded blocks,
 * ``VertexQueryEngine`` — batched, deduplicating point/batch lookups,
   bit-identical to ``spills_to_dense`` rows.
+
+The lifecycle front door — publish a layer, open a reader pinned to the
+version current at open time — is ``repro.session.AtlasSession``
+(docs/session_api.md).
 """
 
 from repro.serve_gnn.page_cache import ShardedPageCache

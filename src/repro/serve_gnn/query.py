@@ -3,14 +3,19 @@
 A request is an arbitrary array of vertex ids (duplicates allowed, any
 order).  The engine deduplicates and sorts the ids, maps them to global
 block keys with two binary searches (file bounds, then the file's block
-bounds — no id-column scan), consults the page cache, and coalesces the
-misses into block reads issued in ascending block order, i.e. sequential
-within each file.  Rows come back in request order, bit-identical to the
-rows ``spills_to_dense`` would materialise for the same spill set.
+bounds — no id-column scan), resolves every id's row position with one
+batched binary search per touched *file* against that file's mmapped id
+column, consults the page cache, and coalesces the misses into block
+reads issued in ascending block order, i.e. sequential within each
+file.  Copying rows out is then a single fancy-index scatter per block
+run — no per-block searchsorted or bounds checks on the hot path.  Rows
+come back in request order, bit-identical to the rows
+``spills_to_dense`` would materialise for the same spill set.
 
 Ids absent from the layer raise ``KeyError`` — absence is detected for
-free: either no file/block id-range covers the id (no I/O at all), or the
-fetched block's id column has a gap where the id would sort.
+free: either no file/block id-range covers the id (no I/O at all), or
+the file's id column has a gap where the id would sort, caught before
+any block is fetched.
 
 Threading model: the shared tier is the (lock-sharded) page cache; a
 ``VertexQueryEngine`` is a cheap per-thread view — instantiate one per
@@ -54,9 +59,20 @@ class VertexQueryEngine:
         if len(q) == 0:
             return np.empty((0, self.layer.dim), dtype=self.layer.dtype)
         uids, inv = np.unique(q, return_inverse=True)
-        _, gkey = self.layer.locate(uids)
+        f, gkey = self.layer.locate(uids)
         if np.any(gkey < 0):
             self._raise_missing(uids[gkey < 0])
+
+        # row addressing is resolved once, batched per *file*, against the
+        # mmapped id columns: absolute row -> position within the id's
+        # block, so the per-block loop below is a bare fancy-index scatter
+        # (the old path re-ran searchsorted + bounds checks per block)
+        rowpos = self.layer.locate_rows(uids, f)
+        if np.any(rowpos < 0):
+            self._raise_missing(uids[rowpos < 0])
+        local = rowpos - (gkey - self.layer.block_base[f]) * (
+            self.layer.file_block_rows[f]
+        )
 
         # uids are sorted and files/blocks are id-ordered, so gkey is
         # non-decreasing: each needed block owns one contiguous uid slice
@@ -69,9 +85,11 @@ class VertexQueryEngine:
         miss = [i for i, b in enumerate(blocks) if b is None]
         if miss:
             # need_keys is sorted, so misses are fetched in ascending block
-            # order — one open per file, sequential reads within it
+            # order — one open per file, sequential reads within it; block
+            # id columns are neither read nor cached (row addressing is
+            # resolved against the file-level id columns above)
             fetched = self.layer.read_blocks_by_keys(
-                need_keys[np.asarray(miss)], stats=self.stats
+                need_keys[np.asarray(miss)], stats=self.stats, with_ids=False
             )
             for i, blk in zip(miss, fetched):
                 blocks[i] = blk
@@ -84,14 +102,7 @@ class VertexQueryEngine:
         out = np.empty((len(uids), self.layer.dim), dtype=self.layer.dtype)
         for j in range(len(need_keys)):
             lo, hi = starts[j], ends[j]
-            want = uids[lo:hi]
-            bids, brows = blocks[j]
-            pos = np.searchsorted(bids, want)
-            found = pos < len(bids)
-            found[found] &= bids[pos[found]] == want[found]
-            if not np.all(found):
-                self._raise_missing(want[~found])
-            out[lo:hi] = brows[pos]
+            out[lo:hi] = blocks[j][1][local[lo:hi]]
         self.rows_served += len(q)
         return out[inv]
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 
 import numpy as np
 
@@ -101,6 +102,12 @@ class ServableLayer:
     num_rows: int
     dim: int
     dtype: np.dtype
+    file_block_rows: np.ndarray = None  # i64 [n_files], per-file block size
+    epoch: int | None = None  # published version this view was opened at
+    _id_cols: list = dataclasses.field(default=None, repr=False)
+    _id_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False
+    )
 
     @property
     def num_blocks(self) -> int:
@@ -138,24 +145,31 @@ class ServableLayer:
             num_rows=sum(f.num_rows for f in files),
             dim=files[0].dim,
             dtype=files[0].dtype,
+            file_block_rows=np.array(
+                [ix.block_rows for ix in indexes], dtype=np.int64
+            ),
         )
 
     @staticmethod
     def from_store(
-        store, layer: int, stats: IOStats | None = None
+        store, layer: int, version: int | None = None, stats: IOStats | None = None
     ) -> "ServableLayer":
-        """Open the servable view a ``GraphStore`` manifest registered for
-        ``layer`` (see ``GraphStore.register_servable_layer``)."""
-        servable = store.manifest.get("servable_layers", {})
-        entry = servable.get(str(layer))
-        if entry is None:
-            raise KeyError(
-                f"layer {layer} not registered as servable "
-                f"(have: {sorted(servable)})"
-            )
-        return ServableLayer.open(
-            entry["files"], block_rows=entry["block_rows"], stats=stats
+        """Open the servable view of one published version of ``layer``
+        (default: the current version) from a ``GraphStore`` manifest —
+        see ``GraphStore.publish_servable_layer`` /
+        ``repro.session.AtlasSession.publish``."""
+        info = store.servable_version_info(layer, epoch=version)
+        view = ServableLayer.open(
+            info["files"], block_rows=info["block_rows"], stats=stats
         )
+        view.epoch = int(info["epoch"])
+        return view
+
+    def close(self) -> None:
+        """Drop the lazily-opened id-column mmaps (and their fds).  The
+        view stays usable; columns re-open on next use."""
+        with self._id_lock:
+            self._id_cols = None
 
     # ------------------------------------------------------------ lookup
     def locate(self, unique_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -180,6 +194,41 @@ class ServableLayer:
         f[gkey < 0] = -1
         return f, gkey
 
+    def file_ids(self, fi: int) -> np.ndarray:
+        """The full sorted id column of file ``fi`` as a lazily-opened,
+        memory-mapped view (one mmap per file, cached on the layer).
+        Locked: a ``ServableLayer`` is shared across query threads."""
+        with self._id_lock:
+            if self._id_cols is None:
+                self._id_cols = [None] * len(self.files)
+            col = self._id_cols[fi]
+            if col is None:
+                col = self.files[fi].ids_mmap()
+                self._id_cols[fi] = col
+            return col
+
+    def locate_rows(self, unique_ids: np.ndarray, f: np.ndarray) -> np.ndarray:
+        """Absolute row position of each id within its file, or -1.
+
+        ``f`` is the per-id file index from ``locate``.  One batched
+        binary search per *file* touched (against the mmapped id column)
+        instead of one per block — the serving hot path's row addressing.
+        An id inside a block's [min, max] range but absent from the file
+        shows up as -1 here without any block fetch."""
+        uids = np.asarray(unique_ids, dtype=np.uint64)
+        f = np.asarray(f, dtype=np.int64)
+        rowpos = np.full(len(uids), -1, dtype=np.int64)
+        for fi in np.unique(f[f >= 0]).tolist():
+            sel = f == fi
+            ids_col = self.file_ids(fi)
+            want = uids[sel]
+            pos = np.searchsorted(ids_col, want).astype(np.int64)
+            ok = pos < len(ids_col)
+            ok[ok] &= ids_col[pos[ok]] == want[ok]
+            pos[~ok] = -1
+            rowpos[sel] = pos
+        return rowpos
+
     def read_block_by_key(
         self, gkey: int, stats: IOStats | None = None
     ) -> tuple[np.ndarray, np.ndarray]:
@@ -188,14 +237,23 @@ class ServableLayer:
         return self.files[fi].read_block(self.indexes[fi], b, stats=stats)
 
     def read_blocks_by_keys(
-        self, gkeys: np.ndarray, stats: IOStats | None = None
+        self,
+        gkeys: np.ndarray,
+        stats: IOStats | None = None,
+        with_ids: bool = True,
     ) -> list[tuple[np.ndarray, np.ndarray]]:
         """Fetch several blocks, opening each underlying file only once;
         with `gkeys` sorted (the query engine's miss list), the reads within
-        a file proceed in ascending offset order — sequential I/O."""
+        a file proceed in ascending offset order — sequential I/O.
+
+        ``with_ids=False`` skips the id-column pread per block (the tuple's
+        ids slot is an empty array): the query engine resolves row
+        positions against the file-level mmapped id columns, so fetching
+        and caching per-block ids would only waste I/O and cache budget."""
         gkeys = np.asarray(gkeys, dtype=np.int64)
         fis = np.searchsorted(self.block_base, gkeys, side="right") - 1
         blocks: list = [None] * len(gkeys)
+        no_ids = np.empty(0, dtype=np.uint64)
         for fi in np.unique(fis).tolist():
             sel = np.flatnonzero(fis == fi)
             f, idx = self.files[fi], self.indexes[fi]
@@ -204,15 +262,20 @@ class ServableLayer:
                 for j in sel.tolist():
                     b = int(gkeys[j]) - int(self.block_base[fi])
                     n = idx.rows_in_block(b)
-                    fh.seek(int(idx.id_off[b]))
-                    id_buf = fh.read(n * 8)
+                    if with_ids:
+                        fh.seek(int(idx.id_off[b]))
+                        id_buf = fh.read(n * 8)
+                        ids = np.frombuffer(id_buf, dtype=np.uint64)
+                        if stats is not None:
+                            stats.add_read(len(id_buf))
+                    else:
+                        ids = no_ids
                     fh.seek(int(idx.data_off[b]))
                     data_buf = fh.read(n * row_bytes)
                     if stats is not None:
-                        stats.add_read(len(id_buf))
                         stats.add_read(len(data_buf))
                     blocks[j] = (
-                        np.frombuffer(id_buf, dtype=np.uint64),
+                        ids,
                         np.frombuffer(data_buf, dtype=f.dtype).reshape(n, f.dim),
                     )
         return blocks

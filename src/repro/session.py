@@ -1,0 +1,546 @@
+"""`AtlasSession`: the run → publish → query lifecycle behind one API.
+
+ATLAS's value is full-graph, layer-wise inference whose outputs are
+immediately servable out-of-core (paper §3).  Before this module the
+lifecycle was three disconnected surfaces — ``AtlasEngine.run`` returning
+a raw ``(SpillSet, list[LayerMetrics])`` tuple driven by an untyped JSON
+manifest, ``GraphStore.register_servable_layer`` swapping servable files
+in place under live readers, and every caller re-wiring the handoff by
+hand.  ``AtlasSession`` owns the whole thing:
+
+    with AtlasSession(store, config=cfg) as session:
+        result = session.infer(specs)            # typed RunResult
+        session.publish(result.final)            # epoch-numbered version
+        with session.reader(result.final.layer) as reader:
+            rows = reader.lookup(vertex_ids)     # pinned to that version
+
+Versioning (MVCC): every ``publish`` compacts into a fresh
+``servable_l<L>/v<epoch>/`` directory and swaps the store manifest's
+current-version pointer atomically; version directories are immutable.
+``reader`` pins (refcounts) the version current at open time, so a
+concurrent re-publish never changes or deletes rows under a live reader;
+unpinned stale versions are garbage-collected on the next publish.  Pins
+are per-session, in-process state — one publishing session per store.
+
+The run side is resumable: ``infer`` records completed layers in a
+schema-versioned ``run_manifest.json`` (``RunManifest``); ``resume=True``
+validates the manifest's schema, store identity, and spill files before
+touching anything, failing with a clear ``StaleManifestError`` instead of
+a raw ``FileNotFoundError`` mid-resume.
+
+``AtlasEngine.run`` and ``GraphStore.register_servable_layer`` survive as
+thin deprecation shims over this API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, LayerMetrics
+from repro.graphs.csr import degrees_from_csr
+from repro.models.gnn import GNNLayerSpec
+from repro.serve_gnn.page_cache import ShardedPageCache
+from repro.serve_gnn.query import VertexQueryEngine
+from repro.serve_gnn.servable import ServableLayer
+from repro.storage.iostats import IOStats
+from repro.storage.layout import GraphStore
+from repro.storage.spill import DEFAULT_BLOCK_ROWS, SpillFile, SpillSet
+
+RUN_MANIFEST_SCHEMA_VERSION = 2
+
+
+class StaleManifestError(RuntimeError):
+    """A run manifest that cannot be resumed: wrong schema version, a
+    different store, or spill files that no longer exist."""
+
+
+# --------------------------------------------------------------------------
+# Typed run manifest (replaces the raw run_manifest.json dict)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunManifest:
+    """Schema-versioned record of one inference run's progress.
+
+    A layer is a transaction: ``completed_layers`` and the completed
+    layers' spill paths are only advanced after the layer's spills are
+    fully on disk, so a crash mid-layer resumes from the previous one.
+    """
+
+    num_vertices: int
+    num_layers: int  # len(specs) of the run this manifest belongs to
+    layer_dims: list[int] = dataclasses.field(default_factory=list)  # out_dim per spec
+    completed_layers: int = 0
+    spills: dict[int, list[str]] = dataclasses.field(default_factory=dict)
+    schema_version: int = RUN_MANIFEST_SCHEMA_VERSION
+
+    def save(self, path: str) -> None:
+        payload = {
+            "schema_version": self.schema_version,
+            "num_vertices": self.num_vertices,
+            "num_layers": self.num_layers,
+            "layer_dims": list(self.layer_dims),
+            "completed_layers": self.completed_layers,
+            "spills": {str(k): v for k, v in self.spills.items()},
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2)
+        os.replace(tmp, path)
+
+    @staticmethod
+    def load(path: str) -> "RunManifest":
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except ValueError as e:  # includes json.JSONDecodeError
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest (not valid JSON: {e})"
+            ) from e
+        ver = data.get("schema_version") if isinstance(data, dict) else None
+        if ver != RUN_MANIFEST_SCHEMA_VERSION:
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest (schema_version={ver!r}, "
+                f"this build writes {RUN_MANIFEST_SCHEMA_VERSION}); delete the "
+                f"workdir or rerun without resume"
+            )
+        try:
+            return RunManifest(
+                num_vertices=int(data["num_vertices"]),
+                num_layers=int(data["num_layers"]),
+                layer_dims=[int(d) for d in data["layer_dims"]],
+                completed_layers=int(data["completed_layers"]),
+                spills={
+                    int(k): list(v) for k, v in data.get("spills", {}).items()
+                },
+                schema_version=int(ver),
+            )
+        except (KeyError, TypeError, ValueError) as e:
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest (malformed field: {e!r})"
+            ) from e
+
+    def validate_resume(
+        self, path: str, num_vertices: int, layer_dims: list[int]
+    ) -> None:
+        """Fail fast — before any layer work — if this manifest does not
+        belong to (store, specs) or its recorded spill files are gone."""
+        if self.num_vertices != num_vertices:
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest (records "
+                f"{self.num_vertices} vertices, store has {num_vertices})"
+            )
+        if self.layer_dims != list(layer_dims):
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest (records layer dims "
+                f"{self.layer_dims}, this run's specs have {list(layer_dims)})"
+            )
+        if self.completed_layers > self.num_layers:
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest ({self.completed_layers} "
+                f"completed layers, run has only {self.num_layers})"
+            )
+        if not self.completed_layers:
+            return
+        paths = self.spills.get(self.completed_layers)
+        if not paths:
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest (no spill files recorded "
+                f"for completed layer {self.completed_layers})"
+            )
+        missing = [p for p in paths if not os.path.exists(p)]
+        if missing:
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest — {len(missing)} of "
+                f"{len(paths)} spill files for layer {self.completed_layers} "
+                f"are missing: {missing}"
+            )
+
+
+# --------------------------------------------------------------------------
+# Typed run results
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerHandle:
+    """One layer's on-disk embeddings as produced by the engine."""
+
+    layer: int  # 1-based output layer number (layer l = output of spec l-1)
+    spills: SpillSet
+    num_rows: int
+    dim: int
+
+
+@dataclasses.dataclass
+class RunResult:
+    """What ``AtlasSession.infer`` returns: the typed manifest, per-layer
+    metrics for the layers run in this call, and handles to every layer
+    whose spills are still on disk (just the final one unless
+    ``AtlasConfig.delete_intermediate`` is off)."""
+
+    manifest: RunManifest
+    metrics: list[LayerMetrics]
+    layers: dict[int, LayerHandle]
+
+    @property
+    def final(self) -> LayerHandle:
+        return self.layers[max(self.layers)]
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishedVersion:
+    """One immutable published servable version of one layer."""
+
+    layer: int
+    epoch: int
+    dir: str
+    files: list[str]
+    num_rows: int
+    dim: int
+    gc_removed: tuple[int, ...] = ()  # stale epochs collected by this publish
+
+
+# --------------------------------------------------------------------------
+# Pinned readers
+# --------------------------------------------------------------------------
+
+
+class SessionReader(VertexQueryEngine):
+    """A ``VertexQueryEngine`` pinned to one published version.
+
+    The pin (a per-session refcount) keeps the version's files on disk
+    across re-publishes; ``close`` releases it, after which the version is
+    collectable on the next publish.  Use as a context manager.
+    """
+
+    def __init__(
+        self,
+        session: "AtlasSession",
+        layer_index: int,
+        epoch: int,
+        servable: ServableLayer,
+        cache: ShardedPageCache | None = None,
+        stats: IOStats | None = None,
+    ):
+        super().__init__(servable, cache=cache, stats=stats)
+        self._session = session
+        self.layer_index = layer_index
+        self.version = epoch
+        self._closed = False
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.layer.close()  # drop id-column mmaps
+        self._session._release(self.layer_index, self.version)
+
+    def __enter__(self) -> "SessionReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# --------------------------------------------------------------------------
+# The session
+# --------------------------------------------------------------------------
+
+
+class AtlasSession:
+    """Owns one store's inference workdir and serving versions.
+
+    ``store`` is a ``GraphStore`` or a store root path.  ``workdir``
+    (default ``<store.root>/run``) holds the run manifest and per-layer
+    spill directories.  Pass ``engine`` to reuse a configured (or
+    subclassed) ``AtlasEngine``; otherwise one is built from ``config``.
+    """
+
+    def __init__(
+        self,
+        store: GraphStore | str,
+        config: AtlasConfig | None = None,
+        workdir: str | None = None,
+        engine: AtlasEngine | None = None,
+    ):
+        self.store = GraphStore.open(store) if isinstance(store, str) else store
+        self.engine = engine if engine is not None else AtlasEngine(config)
+        self.workdir = workdir or os.path.join(self.store.root, "run")
+        self._lock = threading.Lock()  # pins + manifest reads + GC
+        self._publish_lock = threading.Lock()  # serializes publishes
+        self._pins: dict[tuple[int, int], int] = {}  # (layer, epoch) -> count
+        self._readers: list[SessionReader] = []
+        self._published_layers: set[int] = set()
+        self._last_result: RunResult | None = None
+        self._session_closed = False
+
+    # ------------------------------------------------------------ context
+    def __enter__(self) -> "AtlasSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Close any still-open readers and collect stale versions of the
+        layers this session published.  Further ``reader`` calls raise."""
+        with self._lock:
+            self._session_closed = True
+            readers, self._readers = self._readers, []
+        for r in readers:
+            r.close()
+        for layer in sorted(self._published_layers):
+            self.gc(layer)
+
+    @property
+    def run_manifest_path(self) -> str:
+        return os.path.join(self.workdir, "run_manifest.json")
+
+    # -------------------------------------------------------------- infer
+    def infer(
+        self, specs: list[GNNLayerSpec], resume: bool = False
+    ) -> RunResult:
+        """Run layer-wise out-of-core inference; returns a typed
+        ``RunResult``.  With ``resume=True`` a valid run manifest in the
+        workdir restarts from the first incomplete layer (a layer is a
+        transaction); an unusable manifest raises ``StaleManifestError``
+        before any work happens."""
+        store = self.store
+        os.makedirs(self.workdir, exist_ok=True)
+        manifest_path = self.run_manifest_path
+        dims = [int(spec.out_dim) for spec in specs]
+        manifest = RunManifest(
+            num_vertices=store.num_vertices,
+            num_layers=len(specs),
+            layer_dims=dims,
+        )
+        if resume and os.path.exists(manifest_path):
+            manifest = RunManifest.load(manifest_path)
+            manifest.validate_resume(manifest_path, store.num_vertices, dims)
+
+        csr = store.topology()
+        in_deg, _ = degrees_from_csr(csr)
+        metrics: list[LayerMetrics] = []
+        layers: dict[int, LayerHandle] = {}
+        spills = store.layer0_spills()
+        done = manifest.completed_layers
+        if done:
+            # every completed layer whose spills survive on disk gets a
+            # handle (earlier ones are usually gone under
+            # delete_intermediate, but a keep-everything run can publish
+            # them after resuming)
+            for k in sorted(k for k in manifest.spills if k <= done):
+                paths = manifest.spills[k]
+                if k < done and not all(os.path.exists(p) for p in paths):
+                    continue
+                ss = SpillSet()
+                for p in paths:
+                    ss.add(SpillFile.open(p))
+                layers[k] = self._handle(k, ss, specs[k - 1].out_dim)
+            spills = layers[done].spills
+
+        cfg = self.engine.config
+        for l in range(done, len(specs)):
+            # discard partial output of a crashed attempt at this layer
+            out_dir = os.path.join(self.workdir, f"layer_{l + 1}")
+            if os.path.exists(out_dir):
+                shutil.rmtree(out_dir)
+            layer_spills, m = self.engine.run_layer(
+                csr, in_deg, spills, specs[l], out_dir, layer_index=l
+            )
+            metrics.append(m)
+            # advance the manifest BEFORE deleting the previous layer's
+            # spills: a crash in between resumes from the new layer; the
+            # reverse order would leave a manifest pointing at deleted
+            # files, making resume impossible
+            manifest.completed_layers = l + 1
+            manifest.spills[l + 1] = [f.path for f in layer_spills.files]
+            manifest.save(manifest_path)
+            if cfg.delete_intermediate and l > 0:
+                spills.delete_all()
+                layers.pop(l, None)
+            spills = layer_spills
+            layers[l + 1] = self._handle(l + 1, layer_spills, specs[l].out_dim)
+
+        if not layers:  # zero specs: the "final" layer is the input itself
+            layers[0] = self._handle(0, spills, store.feat_dim)
+        result = RunResult(manifest=manifest, metrics=metrics, layers=layers)
+        self._last_result = result
+        return result
+
+    @staticmethod
+    def _handle(layer: int, spills: SpillSet, dim: int) -> LayerHandle:
+        return LayerHandle(
+            layer=layer, spills=spills, num_rows=spills.total_rows(), dim=dim
+        )
+
+    # ------------------------------------------------------------ publish
+    def publish(
+        self,
+        layer: LayerHandle | int,
+        spills: SpillSet | None = None,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+        rows_per_file: int | None = None,
+        stats: IOStats | None = None,
+    ) -> PublishedVersion:
+        """Compact one layer's spills into a new epoch-numbered servable
+        version and atomically swap the store's current-version pointer.
+        ``layer`` is a ``LayerHandle`` (e.g. ``result.final``), or a layer
+        number — resolved against ``spills`` when given, else against the
+        session's last ``infer`` result.  Stale versions not pinned by an
+        open reader are garbage-collected before returning."""
+        handle = self._resolve(layer, spills)
+        with self._publish_lock:
+            info = self.store.publish_servable_layer(
+                handle.layer,
+                handle.spills,
+                block_rows=block_rows,
+                rows_per_file=rows_per_file,
+                stats=stats,
+            )
+            self._published_layers.add(handle.layer)
+            removed = self._gc_locked(handle.layer)
+        return PublishedVersion(
+            layer=handle.layer,
+            epoch=info["epoch"],
+            dir=info["dir"],
+            files=list(info["files"]),
+            num_rows=info["num_rows"],
+            dim=info["dim"],
+            gc_removed=tuple(removed),
+        )
+
+    def _resolve(
+        self, layer: LayerHandle | int, spills: SpillSet | None
+    ) -> LayerHandle:
+        if isinstance(layer, LayerHandle):
+            if spills is not None:
+                raise ValueError("pass a LayerHandle or (layer, spills), not both")
+            return layer
+        layer = int(layer)
+        if spills is not None:
+            if not spills.files:
+                raise ValueError("cannot publish an empty spill set")
+            return self._handle(layer, spills, spills.files[0].dim)
+        if self._last_result is None or layer not in self._last_result.layers:
+            have = (
+                sorted(self._last_result.layers) if self._last_result else []
+            )
+            raise KeyError(
+                f"layer {layer} has no spills in this session's last run "
+                f"(have: {have}); pass spills= or a LayerHandle"
+            )
+        return self._last_result.layers[layer]
+
+    def gc(self, layer: int) -> list[int]:
+        """Drop every stale (non-current) version of ``layer`` that no open
+        reader pins.  Returns the collected epoch numbers."""
+        with self._publish_lock:  # never concurrent with a manifest write
+            return self._gc_locked(layer)
+
+    def _gc_locked(self, layer: int) -> list[int]:
+        """GC body; caller holds ``_publish_lock``.
+
+        Only the manifest retirement happens under the pin lock; the
+        (potentially large) file deletion runs after it is released, so
+        concurrent ``reader`` opens never stall on disk I/O."""
+        with self._lock:
+            try:
+                current = self.store.current_servable_epoch(layer)
+            except KeyError:
+                return []
+            retired: list[tuple[int, dict]] = []
+            for epoch in self.store.servable_versions(layer):
+                if epoch != current and not self._pins.get((layer, epoch)):
+                    info = self.store.drop_servable_version(
+                        layer, epoch, delete_files=False
+                    )
+                    retired.append((epoch, info))
+        for _, info in retired:
+            self.store.delete_servable_files(layer, info)
+        return [e for e, _ in retired]
+
+    # ------------------------------------------------------------- reader
+    def reader(
+        self,
+        layer: int,
+        epoch: int | None = None,
+        cache: ShardedPageCache | None = None,
+        cache_bytes: int | None = None,
+        num_shards: int = 4,
+        stats: IOStats | None = None,
+    ) -> SessionReader:
+        """A query engine pinned to the version of ``layer`` current at
+        this call (or an explicit still-on-disk ``epoch``).  The pinned
+        version survives re-publishes until the reader is closed.
+
+        ``cache_bytes`` builds a fresh per-reader ``ShardedPageCache``;
+        pass ``cache`` only to share one across readers of the *same*
+        version — block keys are per-version, so a cache must never
+        outlive the version it was filled from."""
+        layer = int(layer)
+        with self._lock:
+            if self._session_closed:
+                raise RuntimeError("AtlasSession is closed")
+            info = self.store.servable_version_info(layer, epoch)
+            e = int(info["epoch"])
+            self._pins[(layer, e)] = self._pins.get((layer, e), 0) + 1
+        try:
+            servable = ServableLayer.open(
+                info["files"], block_rows=info["block_rows"], stats=stats
+            )
+            if cache is None and cache_bytes:
+                cache = ShardedPageCache(
+                    servable.num_blocks, cache_bytes, num_shards=num_shards
+                )
+            r = SessionReader(
+                self, layer, e, servable, cache=cache, stats=stats
+            )
+        except BaseException:
+            self._release(layer, e)
+            raise
+        with self._lock:
+            if not self._session_closed:
+                self._readers.append(r)
+                return r
+        # close() ran while this reader was being opened: it must not
+        # escape the session's cleanup — unpin, re-collect (close()'s GC
+        # skipped the then-pinned version), and refuse
+        r.close()
+        self.gc(layer)
+        raise RuntimeError("AtlasSession is closed")
+
+    def _release(self, layer: int, epoch: int) -> None:
+        with self._lock:
+            key = (layer, epoch)
+            n = self._pins.get(key, 0) - 1
+            if n > 0:
+                self._pins[key] = n
+            else:
+                self._pins.pop(key, None)
+            self._readers = [r for r in self._readers if not r._closed]
+
+    def pinned_versions(self, layer: int) -> dict[int, int]:
+        """Epoch -> open-reader count for one layer (diagnostics/tests)."""
+        with self._lock:
+            return {
+                e: n for (l, e), n in self._pins.items() if l == int(layer)
+            }
+
+
+__all__ = [
+    "AtlasSession",
+    "LayerHandle",
+    "PublishedVersion",
+    "RunManifest",
+    "RunResult",
+    "SessionReader",
+    "StaleManifestError",
+    "RUN_MANIFEST_SCHEMA_VERSION",
+]

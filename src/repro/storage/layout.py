@@ -13,7 +13,9 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
+import warnings
 from typing import Iterable, Iterator
 
 import numpy as np
@@ -166,6 +168,163 @@ class GraphStore:
         return ss
 
     # ----------------------------------------------------------- serving
+    #
+    # Servable layers are *versioned* (MVCC): every publish compacts into a
+    # fresh epoch-numbered directory ``servable_l<L>/v<epoch>/`` and the
+    # manifest entry for the layer is a pointer swap:
+    #
+    #     "servable_layers": {"2": {
+    #         "current": 3, "next_epoch": 4,
+    #         "versions": {"3": {"epoch": 3, "dir": ..., "files": [...],
+    #                            "block_rows": ..., "num_rows": ...,
+    #                            "dim": ..., "dtype": ...}},
+    #         ...plus a flat mirror of the current version's fields for
+    #         pre-versioning readers ("files", "block_rows", ...)
+    #     }}
+    #
+    # Published version directories are immutable; a re-publish never touches
+    # an existing version's files, so a reader opened against epoch N keeps
+    # serving bit-identical rows while epoch N+1 lands.  Retiring old
+    # versions is the caller's job (``repro.session.AtlasSession`` refcounts
+    # open readers and GCs unpinned stale versions on the next publish).
+    def _layer_base_dir(self, layer: int) -> str:
+        return os.path.join(self.root, f"servable_l{layer}")
+
+    def _servable_entry(self, layer: int, create: bool = False) -> dict:
+        """The (normalized) manifest entry for one servable layer.
+
+        Entries written by pre-versioning builds are flat file lists; they
+        are wrapped in place as epoch 1 so every consumer sees the
+        versioned shape.
+        """
+        if create:
+            layers = self.manifest.setdefault("servable_layers", {})
+        else:
+            layers = self.manifest.get("servable_layers", {})
+        key = str(int(layer))
+        entry = layers.get(key)
+        if entry is None:
+            if not create:
+                # list() snapshots atomically: concurrent publishes may be
+                # inserting entries while an error path formats this
+                raise KeyError(
+                    f"layer {layer} not registered as servable "
+                    f"(have: {sorted(list(layers))})"
+                )
+            entry = {"current": None, "next_epoch": 1, "versions": {}}
+            layers[key] = entry
+        elif "versions" not in entry:
+            # legacy flat entry: its files live directly in the layer base
+            # dir (no v-subdir), so record dir=base and delete per-file on GC
+            info = {
+                k: entry[k]
+                for k in ("files", "block_rows", "num_rows", "dim", "dtype")
+            }
+            info["epoch"] = 1
+            info["dir"] = self._layer_base_dir(layer)
+            entry.update(
+                {"current": 1, "next_epoch": 2, "versions": {"1": info}}
+            )
+        return entry
+
+    def publish_servable_layer(
+        self,
+        layer: int,
+        spills: SpillSet,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+        rows_per_file: int | None = None,
+        stats: IOStats | None = None,
+    ) -> dict:
+        """Compact one layer's (possibly overlapping) spill set into a new
+        epoch-numbered servable version directory and swap the manifest's
+        current-version pointer to it atomically.  Returns the new
+        version-info dict (``epoch``, ``dir``, ``files``, ``block_rows``,
+        ``num_rows``, ``dim``, ``dtype``).
+
+        Existing versions are never modified or removed here — see
+        ``drop_servable_version`` / ``AtlasSession.publish`` for GC.
+        """
+        from repro.serve_gnn.servable import DEFAULT_ROWS_PER_FILE, compact_spills
+
+        entry = self._servable_entry(layer, create=True)
+        epoch = int(entry.get("next_epoch") or 1)
+        out_dir = os.path.join(self._layer_base_dir(layer), f"v{epoch:06d}")
+        # compact into a staging dir and rename only on success, so a failed
+        # publish never lands a half-written version (and never touches the
+        # currently published one)
+        tmp_dir = out_dir + ".compact"
+        if os.path.exists(tmp_dir):
+            shutil.rmtree(tmp_dir)
+        try:
+            tmp_files = compact_spills(
+                spills,
+                tmp_dir,
+                rows_per_file=rows_per_file or DEFAULT_ROWS_PER_FILE,
+                block_rows=block_rows,
+                stats=stats,
+            )
+            if os.path.exists(out_dir):  # leftover of a crashed, unrecorded publish
+                shutil.rmtree(out_dir)
+            os.replace(tmp_dir, out_dir)
+            files = [
+                os.path.join(out_dir, os.path.basename(p)) for p in tmp_files
+            ]
+            first = SpillFile.open(files[0])
+        except BaseException:
+            if not entry["versions"]:
+                # a failed FIRST publish must not leave a phantom
+                # version-less entry behind for later manifest writes
+                self.manifest.get("servable_layers", {}).pop(str(int(layer)), None)
+            raise
+        info = {
+            "epoch": epoch,
+            "dir": out_dir,
+            "files": files,
+            "block_rows": int(block_rows),
+            "num_rows": spills.total_rows(),
+            "dim": first.dim,
+            "dtype": str(first.dtype),
+        }
+        # version entry first, current pointer second: a concurrent reader
+        # that observes the new current always finds its version recorded
+        entry["versions"][str(epoch)] = info
+        entry["current"] = epoch
+        entry["next_epoch"] = epoch + 1
+        for k in ("files", "block_rows", "num_rows", "dim", "dtype"):
+            entry[k] = info[k]  # flat mirror for pre-versioning readers
+        self._write_manifest()
+        self._sweep_orphan_versions(layer, entry)
+        return info
+
+    _VERSION_DIR = re.compile(r"^v\d{6}(\.compact)?$")
+
+    def _sweep_orphan_versions(self, layer: int, entry: dict) -> None:
+        """Remove version-shaped directories the manifest doesn't record.
+
+        A crash between un-recording a version and deleting its files
+        (``drop_servable_version``'s ordering — manifest first, so a
+        recorded version never has missing files) leaves an orphan
+        ``v<epoch>/`` dir; epochs are never reused, so only this sweep can
+        reclaim it.  Orphans are by construction unpinned: a version must
+        be recorded to be opened, and pins are in-process state that died
+        with the crashed process."""
+        base = self._layer_base_dir(layer)
+        recorded = {
+            os.path.abspath(v["dir"]) for v in entry["versions"].values()
+        }
+        try:
+            names = os.listdir(base)
+        except FileNotFoundError:
+            return
+        for name in names:
+            path = os.path.join(base, name)
+            if (
+                self._VERSION_DIR.match(name)
+                and os.path.isdir(path)
+                and os.path.abspath(path) not in recorded
+            ):
+                shutil.rmtree(path, ignore_errors=True)
+
     def register_servable_layer(
         self,
         layer: int,
@@ -174,45 +333,101 @@ class GraphStore:
         rows_per_file: int | None = None,
         stats: IOStats | None = None,
     ) -> list[str]:
-        """Compact one layer's (possibly overlapping) spill set into
-        disjoint block-indexed servable files under the store root and
-        record them in the manifest.  Returns the servable file paths;
-        open them with ``repro.serve_gnn.ServableLayer.from_store``.
-
-        Re-registering a layer replaces its previous servable files.
+        """Deprecated: use ``AtlasSession.publish`` (or
+        ``publish_servable_layer`` directly).  Publishes a new version and —
+        matching the old replace-in-place contract — immediately drops every
+        older version, with no regard for open readers.
         """
-        from repro.serve_gnn.servable import DEFAULT_ROWS_PER_FILE, compact_spills
-
-        out_dir = os.path.join(self.root, f"servable_l{layer}")
-        # compact into a staging dir and swap only on success, so a failed
-        # re-registration never destroys the currently registered layer
-        tmp_dir = out_dir + ".compact"
-        if os.path.exists(tmp_dir):
-            shutil.rmtree(tmp_dir)
-        tmp_files = compact_spills(
+        warnings.warn(
+            "GraphStore.register_servable_layer is deprecated; use "
+            "repro.session.AtlasSession.publish (versioned, reader-safe) or "
+            "GraphStore.publish_servable_layer",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        info = self.publish_servable_layer(
+            layer,
             spills,
-            tmp_dir,
-            rows_per_file=rows_per_file or DEFAULT_ROWS_PER_FILE,
             block_rows=block_rows,
+            rows_per_file=rows_per_file,
             stats=stats,
         )
-        if os.path.exists(out_dir):
-            shutil.rmtree(out_dir)
-        os.replace(tmp_dir, out_dir)
-        files = [os.path.join(out_dir, os.path.basename(p)) for p in tmp_files]
-        first = SpillFile.open(files[0])
-        self.manifest.setdefault("servable_layers", {})[str(layer)] = {
-            "files": files,
-            "block_rows": int(block_rows),
-            "num_rows": spills.total_rows(),
-            "dim": first.dim,
-            "dtype": str(first.dtype),
-        }
-        self._write_manifest()
-        return files
+        for epoch in self.servable_versions(layer):
+            if epoch != info["epoch"]:
+                self.drop_servable_version(layer, epoch)
+        return info["files"]
 
     def servable_layers(self) -> list[int]:
         return sorted(int(k) for k in self.manifest.get("servable_layers", {}))
+
+    def servable_versions(self, layer: int) -> list[int]:
+        """Epoch numbers currently on disk for one servable layer."""
+        # list() snapshots the keys atomically w.r.t. a concurrent publish
+        return sorted(
+            int(k) for k in list(self._servable_entry(layer)["versions"])
+        )
+
+    def current_servable_epoch(self, layer: int) -> int:
+        entry = self._servable_entry(layer)
+        if entry.get("current") is None:
+            raise KeyError(f"layer {layer} has no published servable version")
+        return int(entry["current"])
+
+    def servable_version_info(self, layer: int, epoch: int | None = None) -> dict:
+        """Version-info dict for ``epoch`` (default: the current version)."""
+        entry = self._servable_entry(layer)
+        if epoch is None and entry.get("current") is None:
+            raise KeyError(f"layer {layer} has no published servable version")
+        e = int(entry["current"]) if epoch is None else int(epoch)
+        info = entry["versions"].get(str(e))
+        if info is None:
+            raise KeyError(
+                f"layer {layer} has no servable version {e} "
+                f"(have: {self.servable_versions(layer)})"
+            )
+        return info
+
+    def drop_servable_version(
+        self, layer: int, epoch: int, delete_files: bool = True
+    ) -> dict:
+        """Remove one non-current servable version: manifest entry first
+        (so a crash mid-delete never leaves a recorded version with missing
+        files), then its files.  Refuses to drop the current version.
+
+        ``delete_files=False`` retires only the manifest entry and leaves
+        file removal to the caller via ``delete_servable_files`` — used by
+        ``AtlasSession.gc`` to keep slow disk deletion out of its pin
+        lock."""
+        entry = self._servable_entry(layer)
+        epoch = int(epoch)
+        if entry.get("current") == epoch:
+            raise ValueError(
+                f"layer {layer}: refusing to drop the current servable "
+                f"version {epoch}; publish a newer one first"
+            )
+        info = entry["versions"].pop(str(epoch), None)
+        if info is None:
+            raise KeyError(f"layer {layer} has no servable version {epoch}")
+        self._write_manifest()
+        if delete_files:
+            self.delete_servable_files(layer, info)
+        return info
+
+    def delete_servable_files(self, layer: int, info: dict) -> None:
+        """Delete a retired (already un-recorded) version's files."""
+        vdir = info.get("dir")
+        base = self._layer_base_dir(layer)
+        if vdir and os.path.abspath(vdir) != os.path.abspath(base):
+            shutil.rmtree(vdir, ignore_errors=True)
+        else:
+            # legacy flat layout: files sit in the base dir next to the
+            # version subdirs — remove them individually
+            for p in info["files"]:
+                for path in (p, p + ".idx"):
+                    try:
+                        os.remove(path)
+                    except FileNotFoundError:
+                        pass
 
     def layer_dir(self, layer: int) -> str:
         d = os.path.join(self.root, f"embeddings_l{layer}")

@@ -331,6 +331,22 @@ class SpillFile:
         data_off = ids_off + self.num_rows * 8
         return ids_off, data_off
 
+    def ids_mmap(self) -> np.ndarray:
+        """Read-only memory-mapped view of the sorted id column.
+
+        Pages fault in on demand and live in the OS page cache, so the
+        serving hot path can binary-search a whole file's ids without a
+        read syscall per lookup.  The mapping holds the file open: on
+        POSIX a concurrently unlinked file keeps serving until the view is
+        dropped."""
+        return np.memmap(
+            self.path,
+            dtype=np.uint64,
+            mode="r",
+            offset=_HEADER.size,
+            shape=(self.num_rows,),
+        )
+
     def read_ids(self, stats: IOStats | None = None) -> np.ndarray:
         ids_off, _ = self._offsets()
         with open(self.path, "rb") as f:

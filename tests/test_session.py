@@ -1,0 +1,524 @@
+"""The `AtlasSession` lifecycle API: typed run manifests + resume
+validation, versioned (MVCC) servable publishes with pinned readers and
+GC, and the deprecation shims over the old surfaces
+(docs/session_api.md)."""
+
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.atlas import AtlasConfig, AtlasEngine, spills_to_dense
+from repro.graphs.csr import CSRGraph
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import dense_reference, init_gnn_params
+from repro.serve_gnn import ServableLayer, VertexQueryEngine
+from repro.session import (
+    AtlasSession,
+    RunManifest,
+    StaleManifestError,
+)
+from repro.storage.layout import GraphStore
+from repro.storage.spill import SpillSet, write_spill
+
+from tests.conftest import build_store
+
+
+def scattered_spillset(tmp, rng, num_vertices, dim, n_files, tag="sc", shift=0.0):
+    """Engine-shaped spill set: every vertex exactly once, scattered
+    across files with interleaving id ranges."""
+    perm = rng.permutation(num_vertices)
+    rows = rng.standard_normal((num_vertices, dim)).astype(np.float32)
+    if shift:
+        rows += np.float32(shift)
+    ss = SpillSet()
+    bounds = np.linspace(0, num_vertices, n_files + 1).astype(int)
+    for i in range(n_files):
+        sel = perm[bounds[i] : bounds[i + 1]]
+        if len(sel):
+            ss.add(
+                write_spill(
+                    str(tmp / f"{tag}{i}.spill"),
+                    sel.astype(np.uint64),
+                    rows[sel],
+                    block_rows=64,
+                )
+            )
+    return ss, rows
+
+
+def serving_session(tmp_path, num_vertices):
+    """A session over a minimal store — for publish/reader tests that
+    don't need an engine run."""
+    csr = CSRGraph(
+        indptr=np.zeros(num_vertices + 1, dtype=np.int64),
+        indices=np.empty(0, dtype=np.int64),
+    )
+    store = GraphStore.create(
+        str(tmp_path / "store"),
+        csr,
+        np.zeros((num_vertices, 1), dtype=np.float32),
+        num_partitions=1,
+    )
+    return AtlasSession(store, workdir=str(tmp_path / "run"))
+
+
+# --------------------------------------------------------------------------
+# infer -> publish -> reader round trip
+# --------------------------------------------------------------------------
+
+
+def test_session_round_trip_bit_identical(tmp_path):
+    """Acceptance: session.infer -> session.publish -> reader lookups are
+    bit-identical to spills_to_dense of the engine's spills."""
+    v, d = 1200, 16
+    csr = powerlaw_graph(v, 6, seed=5, self_loops=True)
+    feats = make_features(v, d, seed=5)
+    specs = init_gnn_params("gcn", [d, 12, 8], seed=5)
+    store = build_store(tmp_path, csr, feats, num_partitions=2)
+    cfg = AtlasConfig(chunk_bytes=64 * d * 4, hot_slots=400, spill_buffer_rows=128)
+    with AtlasSession(store, config=cfg) as session:
+        result = session.infer(specs)
+        final = result.final
+        assert final.layer == len(specs)
+        assert final.num_rows == v and final.dim == specs[-1].out_dim
+        assert [m.layer for m in result.metrics] == [0, 1]
+        ref = spills_to_dense(final.spills, v, final.dim)
+
+        pub = session.publish(final, block_rows=128, rows_per_file=500)
+        assert pub.epoch == 1 and pub.layer == final.layer
+        with session.reader(final.layer, cache_bytes=1 << 20) as reader:
+            assert reader.version == pub.epoch
+            rng = np.random.default_rng(6)
+            for _ in range(10):
+                q = rng.integers(0, v, size=64)
+                assert np.array_equal(reader.lookup(q), ref[q])
+            assert np.array_equal(reader.lookup(np.arange(v)), ref)
+        # numbers agree with the dense in-memory oracle end to end
+        err = np.abs(ref - dense_reference(csr, feats, specs)).max(axis=1).mean()
+        assert err < 1e-4
+
+
+def test_session_infer_resume_after_crash(tmp_path):
+    """Layer-transaction resume through the session API."""
+    csr = powerlaw_graph(500, 5, seed=31)
+    feats = make_features(500, 16, seed=31)
+    specs = init_gnn_params("gcn", [16, 12, 8], seed=7)
+    store = build_store(tmp_path, csr, feats)
+    cfg = AtlasConfig(
+        chunk_bytes=64 * 16 * 4, hot_slots=500, delete_intermediate=False
+    )
+
+    class CrashBeforeLayer1(AtlasEngine):
+        def run_layer(self, *a, **kw):
+            if kw.get("layer_index") == 1:
+                raise KeyboardInterrupt("simulated preemption")
+            return super().run_layer(*a, **kw)
+
+    wd = str(tmp_path / "work")
+    with pytest.raises(KeyboardInterrupt):
+        AtlasSession(store, workdir=wd, engine=CrashBeforeLayer1(cfg)).infer(specs)
+    result = AtlasSession(store, config=cfg, workdir=wd).infer(specs, resume=True)
+    assert [m.layer for m in result.metrics] == [1]
+    out = spills_to_dense(result.final.spills, 500, 8)
+    ref_run = AtlasSession(store, config=cfg, workdir=str(tmp_path / "w2")).infer(specs)
+    assert np.array_equal(out, spills_to_dense(ref_run.final.spills, 500, 8))
+
+
+def test_manifest_advances_before_intermediate_deletion(tmp_path, monkeypatch):
+    """The manifest must record a completed layer before the previous
+    layer's spills are deleted — a crash between the two must leave a
+    resumable state, never a manifest pointing at deleted files."""
+    csr = powerlaw_graph(300, 5, seed=12, self_loops=True)
+    feats = make_features(300, 8, seed=12)
+    specs = init_gnn_params("gcn", [8, 6, 4], seed=12)
+    store = build_store(tmp_path, csr, feats)
+    session = AtlasSession(
+        store,
+        config=AtlasConfig(chunk_bytes=64 * 8 * 4, hot_slots=300),
+        workdir=str(tmp_path / "work"),
+    )
+    orig = SpillSet.delete_all
+    deletions = []
+
+    def checked_delete(self):
+        manifest = RunManifest.load(session.run_manifest_path)
+        resume_needs = set(manifest.spills[manifest.completed_layers])
+        doomed = {f.path for f in self.files}
+        assert not resume_needs & doomed, (
+            "deleting spills the on-disk manifest still resumes from"
+        )
+        deletions.append(len(doomed))
+        return orig(self)
+
+    monkeypatch.setattr(SpillSet, "delete_all", checked_delete)
+    session.infer(specs)
+    assert deletions  # intermediate deletion actually ran
+
+
+# --------------------------------------------------------------------------
+# Resume validation (stale/foreign manifests fail fast and clearly)
+# --------------------------------------------------------------------------
+
+
+def _run_session(tmp_path, name="w"):
+    csr = powerlaw_graph(300, 5, seed=3, self_loops=True)
+    feats = make_features(300, 8, seed=3)
+    specs = init_gnn_params("gcn", [8, 4], seed=3)
+    store = build_store(tmp_path, csr, feats)
+    session = AtlasSession(
+        store,
+        config=AtlasConfig(chunk_bytes=64 * 8 * 4, hot_slots=300),
+        workdir=str(tmp_path / name),
+    )
+    return session, specs
+
+
+def test_resume_rejects_unversioned_manifest(tmp_path):
+    """A pre-schema (v1-era) manifest must raise StaleManifestError, not
+    blindly SpillFile.open paths out of it."""
+    session, specs = _run_session(tmp_path)
+    os.makedirs(session.workdir)
+    with open(session.run_manifest_path, "w") as f:
+        json.dump({"completed_layers": 1, "spills": {"1": ["/nowhere.spill"]}}, f)
+    with pytest.raises(StaleManifestError, match="stale/foreign"):
+        session.infer(specs, resume=True)
+
+
+def test_resume_rejects_unparseable_or_malformed_manifest(tmp_path):
+    session, specs = _run_session(tmp_path)
+    os.makedirs(session.workdir)
+    with open(session.run_manifest_path, "w") as f:
+        f.write("{not json")
+    with pytest.raises(StaleManifestError, match="not valid JSON"):
+        session.infer(specs, resume=True)
+    with open(session.run_manifest_path, "w") as f:
+        json.dump({"schema_version": 2, "completed_layers": 0}, f)  # fields gone
+    with pytest.raises(StaleManifestError, match="malformed field"):
+        session.infer(specs, resume=True)
+
+
+def test_resume_rejects_different_spec_stack(tmp_path):
+    """A manifest written by a run with different layer specs must not
+    silently hand back that run's outputs."""
+    session, specs = _run_session(tmp_path)
+    session.infer(specs)  # completes: [8 -> 4]
+    other = init_gnn_params("gcn", [8, 6], seed=3)  # different out_dim
+    with pytest.raises(StaleManifestError, match="layer dims"):
+        AtlasSession(
+            session.store,
+            config=AtlasConfig(chunk_bytes=64 * 8 * 4, hot_slots=300),
+            workdir=session.workdir,
+        ).infer(other, resume=True)
+
+
+def test_resume_rejects_foreign_store(tmp_path):
+    session, specs = _run_session(tmp_path)
+    session.infer(specs)  # writes a valid manifest for this store
+    manifest = RunManifest.load(session.run_manifest_path)
+    manifest.num_vertices += 7  # a different graph wrote this
+    manifest.save(session.run_manifest_path)
+    with pytest.raises(StaleManifestError, match="vertices"):
+        session.infer(specs, resume=True)
+
+
+def test_resume_lists_missing_spill_paths(tmp_path):
+    session, specs = _run_session(tmp_path)
+    result = session.infer(specs)
+    victims = [f.path for f in result.final.spills.files][:2]
+    for p in victims:
+        os.remove(p)
+    with pytest.raises(StaleManifestError) as ei:
+        session.infer(specs, resume=True)
+    msg = str(ei.value)
+    assert "stale/foreign" in msg
+    for p in victims:
+        assert p in msg  # every missing path is named
+
+
+# --------------------------------------------------------------------------
+# Versioned publish: pinned readers + GC (ISSUE 4 satellite)
+# --------------------------------------------------------------------------
+
+
+def test_reader_pinned_across_concurrent_republish(tmp_path):
+    """A reader opened before a re-publish returns bit-identical rows to
+    spills_to_dense of its pinned version while another thread
+    republishes the same layer — never mixed-version, never missing."""
+    v, d = 800, 8
+    rng = np.random.default_rng(0)
+    session = serving_session(tmp_path, v)
+    ss_a, _ = scattered_spillset(tmp_path, rng, v, d, n_files=5, tag="a")
+    ss_b, _ = scattered_spillset(tmp_path, rng, v, d, n_files=4, tag="b", shift=1.0)
+    ref_a = spills_to_dense(ss_a, v, d)
+    session.publish(1, spills=ss_a, rows_per_file=200, block_rows=32)
+
+    reader = session.reader(1, cache_bytes=1 << 20)
+    pinned = reader.version
+    done = threading.Event()
+    publish_errors = []
+
+    def republish_loop():
+        try:
+            for i in range(5):
+                ss = ss_b if i % 2 == 0 else ss_a
+                session.publish(1, spills=ss, rows_per_file=150, block_rows=16)
+        except Exception as e:  # noqa: BLE001
+            publish_errors.append(e)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=republish_loop)
+    t.start()
+    checks = 0
+    while not done.is_set() or checks < 20:
+        q = rng.integers(0, v, size=96)
+        got = reader.lookup(q)
+        assert np.array_equal(got, ref_a[q]), "pinned reader saw foreign rows"
+        checks += 1
+        if checks > 10_000:  # pragma: no cover - watchdog
+            break
+    t.join()
+    assert not publish_errors
+    assert checks >= 20
+    # full-sweep still bit-identical to the pinned version's materialisation
+    assert np.array_equal(reader.lookup(np.arange(v)), ref_a)
+    store = session.store
+    assert pinned in store.servable_versions(1)  # survived every re-publish
+    reader.close()
+    session.publish(1, spills=ss_a)  # GC happens on the next publish
+    assert pinned not in store.servable_versions(1)
+    session.close()
+
+
+def test_publish_gc_drops_unpinned_keeps_pinned(tmp_path):
+    v, d = 400, 4
+    rng = np.random.default_rng(1)
+    session = serving_session(tmp_path, v)
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=3)
+    p1 = session.publish(1, spills=ss, rows_per_file=128)
+    r1 = session.reader(1)  # pins epoch 1
+    p2 = session.publish(1, spills=ss, rows_per_file=64)
+    # epoch 1 pinned -> survives; after another publish epoch 2 (unpinned,
+    # stale) is collected, epoch 1 still survives
+    assert session.store.servable_versions(1) == [p1.epoch, p2.epoch]
+    p3 = session.publish(1, spills=ss)
+    assert p2.epoch in p3.gc_removed
+    assert session.store.servable_versions(1) == [p1.epoch, p3.epoch]
+    assert os.path.isdir(p1.dir) and not os.path.exists(p2.dir)
+    # two readers on one version: closing one keeps the pin
+    r1b = session.reader(1, epoch=p1.epoch)
+    r1.close()
+    session.publish(1, spills=ss)
+    assert p1.epoch in session.store.servable_versions(1)
+    assert np.array_equal(
+        r1b.lookup(np.arange(v)), spills_to_dense(ss, v, d)
+    )
+    r1b.close()
+    final = session.publish(1, spills=ss)
+    assert session.store.servable_versions(1) == [final.epoch]
+    assert session.pinned_versions(1) == {}
+    session.close()
+
+
+def test_publish_sweeps_orphan_version_dirs(tmp_path):
+    """A crash between un-recording a version and deleting its files
+    leaves an orphan v<epoch>/ dir; the next publish reclaims it (epochs
+    are never reused, so nothing else could)."""
+    v, d = 200, 4
+    rng = np.random.default_rng(7)
+    session = serving_session(tmp_path, v)
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    p1 = session.publish(1, spills=ss)
+    base = os.path.dirname(p1.dir)
+    orphan = os.path.join(base, "v000099")
+    stale_staging = os.path.join(base, "v000098.compact")
+    for d_ in (orphan, stale_staging):
+        os.makedirs(d_)
+        with open(os.path.join(d_, "junk.spill"), "w") as f:
+            f.write("x")
+    p2 = session.publish(1, spills=ss)
+    assert not os.path.exists(orphan) and not os.path.exists(stale_staging)
+    assert os.path.isdir(p2.dir)  # recorded versions untouched
+    with session.reader(1) as r:
+        assert np.array_equal(r.lookup(np.arange(v)), spills_to_dense(ss, v, d))
+    session.close()
+
+
+def test_session_close_collects_stale_versions(tmp_path):
+    v, d = 300, 4
+    rng = np.random.default_rng(2)
+    session = serving_session(tmp_path, v)
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    session.publish(1, spills=ss)
+    reader = session.reader(1)
+    session.publish(1, spills=ss)
+    assert len(session.store.servable_versions(1)) == 2  # v1 pinned
+    session.close()  # closes the leaked reader, then GCs
+    assert len(session.store.servable_versions(1)) == 1
+    assert reader._closed
+    with pytest.raises(RuntimeError, match="closed"):
+        session.reader(1)
+
+
+# --------------------------------------------------------------------------
+# Deprecation shims (acceptance: old surfaces keep working, warn once)
+# --------------------------------------------------------------------------
+
+
+def test_deprecated_shims_delegate_and_warn(tmp_path):
+    v, d = 400, 8
+    csr = powerlaw_graph(v, 5, seed=9, self_loops=True)
+    feats = make_features(v, d, seed=9)
+    specs = init_gnn_params("gcn", [d, 4], seed=9)
+    store = build_store(tmp_path, csr, feats)
+    cfg = AtlasConfig(chunk_bytes=64 * d * 4, hot_slots=v)
+    with pytest.warns(DeprecationWarning, match="AtlasSession.infer"):
+        spills, metrics = AtlasEngine(cfg).run(store, specs, str(tmp_path / "w"))
+    assert len(metrics) == 1
+    ref = spills_to_dense(spills, v, 4)
+    with pytest.warns(DeprecationWarning, match="AtlasSession.publish"):
+        files = store.register_servable_layer(1, spills, block_rows=64)
+    assert all(os.path.exists(p) for p in files)
+    layer = ServableLayer.from_store(store, 1)
+    assert layer.epoch == 1
+    assert np.array_equal(VertexQueryEngine(layer).lookup(np.arange(v)), ref)
+    # the shim keeps the old replace-in-place contract: re-registering
+    # drops every older version with no regard for readers
+    with pytest.warns(DeprecationWarning):
+        store.register_servable_layer(1, spills, block_rows=32)
+    assert store.servable_versions(1) == [2]
+    assert store.manifest["servable_layers"]["1"]["block_rows"] == 32
+
+
+def test_legacy_flat_manifest_entry_is_normalized(tmp_path):
+    """Stores written before versioning (flat servable_layers entries)
+    keep serving, and the first publish wraps them as epoch 1."""
+    v, d = 300, 4
+    rng = np.random.default_rng(4)
+    session = serving_session(tmp_path, v)
+    store = session.store
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=3)
+    ref = spills_to_dense(ss, v, d)
+    # write a legacy-shaped entry by hand (what PR-2-era code persisted)
+    from repro.serve_gnn.servable import compact_spills
+
+    out_dir = os.path.join(store.root, "servable_l1")
+    files = compact_spills(ss, out_dir, rows_per_file=128, block_rows=32)
+    first_dim = ss.files[0].dim
+    store.manifest["servable_layers"] = {
+        "1": {
+            "files": files,
+            "block_rows": 32,
+            "num_rows": v,
+            "dim": first_dim,
+            "dtype": "float32",
+        }
+    }
+    store._write_manifest()
+
+    layer = ServableLayer.from_store(GraphStore.open(store.root), 1)
+    assert layer.epoch == 1
+    assert np.array_equal(VertexQueryEngine(layer).lookup(np.arange(v)), ref)
+    # a session publish on top normalizes + GCs the legacy files
+    pub = session.publish(1, spills=ss)
+    assert pub.epoch == 2 and pub.gc_removed == (1,)
+    assert store.servable_versions(1) == [2]
+    assert not any(os.path.exists(p) for p in files)
+    assert os.path.isdir(out_dir)  # version subdirs still live under it
+    with session.reader(1) as r:
+        assert np.array_equal(r.lookup(np.arange(v)), ref)
+    session.close()
+
+
+def test_failed_first_publish_leaves_no_phantom_entry(tmp_path):
+    """A failed publish of a never-published layer must not leave a
+    version-less manifest entry that later breaks opens of that layer."""
+    v = 100
+    rng = np.random.default_rng(6)
+    session = serving_session(tmp_path, v)
+    store = session.store
+    ss, _ = scattered_spillset(tmp_path, rng, v, 4, n_files=2)
+    bad = SpillSet()
+    bad.add(ss.files[0])
+    bad.add(ss.files[0])  # duplicate rows -> compaction raises
+    with pytest.raises(ValueError, match="duplicate"):
+        session.publish(2, spills=bad)
+    # a failure after compaction (e.g. reading the landed files back)
+    # must also roll the phantom entry back
+    from repro.storage import layout as layout_mod
+
+    orig_open = layout_mod.SpillFile.open
+    try:
+        layout_mod.SpillFile.open = staticmethod(
+            lambda path: (_ for _ in ()).throw(OSError("injected"))
+        )
+        with pytest.raises(OSError, match="injected"):
+            session.publish(3, spills=ss)
+    finally:
+        layout_mod.SpillFile.open = orig_open
+    session.publish(1, spills=ss)  # persists the manifest
+    reopened = GraphStore.open(store.root)
+    assert reopened.servable_layers() == [1]
+    with pytest.raises(KeyError, match="not registered"):
+        session.reader(2)
+    # a failed RE-publish keeps the registered version serving
+    with pytest.raises(ValueError, match="duplicate"):
+        session.publish(1, spills=bad)
+    with session.reader(1) as r:
+        assert np.array_equal(r.lookup(np.arange(v)), spills_to_dense(ss, v, 4))
+    session.close()
+
+
+def test_resume_exposes_surviving_intermediate_layers(tmp_path):
+    """With delete_intermediate off, a resumed run's RunResult carries
+    handles for earlier completed layers still on disk, so they remain
+    publishable."""
+    csr = powerlaw_graph(300, 5, seed=8, self_loops=True)
+    feats = make_features(300, 8, seed=8)
+    specs = init_gnn_params("gcn", [8, 6, 4], seed=8)
+    store = build_store(tmp_path, csr, feats)
+    cfg = AtlasConfig(
+        chunk_bytes=64 * 8 * 4, hot_slots=300, delete_intermediate=False
+    )
+
+    class CrashBeforeLayer1(AtlasEngine):
+        def run_layer(self, *a, **kw):
+            if kw.get("layer_index") == 1:
+                raise KeyboardInterrupt("simulated preemption")
+            return super().run_layer(*a, **kw)
+
+    wd = str(tmp_path / "work")
+    with pytest.raises(KeyboardInterrupt):
+        AtlasSession(store, workdir=wd, engine=CrashBeforeLayer1(cfg)).infer(specs)
+    session = AtlasSession(store, config=cfg, workdir=wd)
+    result = session.infer(specs, resume=True)
+    assert sorted(result.layers) == [1, 2]  # both survive on disk
+    assert result.layers[1].dim == 6 and result.final.layer == 2
+    pub = session.publish(1)  # the resumed-from layer is publishable
+    with session.reader(1) as r:
+        assert r.version == pub.epoch
+        ref = spills_to_dense(result.layers[1].spills, 300, 6)
+        assert np.array_equal(r.lookup(np.arange(300)), ref)
+    session.close()
+
+
+def test_publish_resolution_errors(tmp_path):
+    v = 100
+    rng = np.random.default_rng(5)
+    session = serving_session(tmp_path, v)
+    with pytest.raises(KeyError, match="no spills in this session"):
+        session.publish(3)
+    with pytest.raises(ValueError, match="empty spill set"):
+        session.publish(1, spills=SpillSet())
+    ss, _ = scattered_spillset(tmp_path, rng, v, 4, n_files=2)
+    with pytest.raises(KeyError, match="not registered"):
+        session.reader(9)
+    session.publish(1, spills=ss)
+    with pytest.raises(KeyError, match="no servable version 42"):
+        session.reader(1, epoch=42)
+    with pytest.raises(ValueError, match="current servable version"):
+        session.store.drop_servable_version(1, 1)
+    session.close()
