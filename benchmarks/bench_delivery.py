@@ -6,21 +6,33 @@ policy, and orchestrator — with everything else (disk, feature I/O,
 dense transforms) stubbed out, so the number isolates the bookkeeping
 cost the array-native refactor targets.  ``--mode engine`` additionally
 times a full ``run_layer`` on a real on-disk store for an end-to-end
-view.
+view; ``--mode io`` compares the spill-durability impls (synchronous
+fsync-per-spill vs the write-back scheduler's group commit) across a
+hot-store-fraction sweep, asserting bit-identical dense spills.
+
+``--mmap-features`` generates the synthetic feature matrix straight
+into an on-disk ``.npy`` and feeds the store from a read-only memmap,
+so multi-M-vertex graphs (ROADMAP item) never materialise V×d floats
+in RAM; it turns itself on automatically at --vertices >= 1M.
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_delivery.py
     PYTHONPATH=src python benchmarks/bench_delivery.py --vertices 250000 \
         --policies at,lru --mode both
+    PYTHONPATH=src python benchmarks/bench_delivery.py --mode io \
+        --vertices 2000000 --mmap-features --hot-fracs 0.05,0.125,0.25
 
-Acceptance target (ISSUE 1): >= 3x delivery throughput for
-``policy_impl='array'`` over ``'python'`` at >= 100k vertices.
+Acceptance targets: >= 3x delivery throughput for
+``policy_impl='array'`` over ``'python'`` at >= 100k vertices (ISSUE 1);
+``io_impl='writeback'`` cuts layer-critical-path spill seconds vs
+``'sync'`` with barrier time reported separately (ISSUE 5).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import tempfile
 import time
 
@@ -32,7 +44,7 @@ from repro.core.eviction import make_policy
 from repro.core.memory_manager import MemoryManager
 from repro.core.orchestrator import Orchestrator
 from repro.graphs.csr import degrees_from_csr
-from repro.graphs.synth import make_features, powerlaw_graph
+from repro.graphs.synth import make_features, make_features_mmap, powerlaw_graph
 from repro.models.gnn import init_gnn_params
 from repro.session import AtlasSession
 from repro.storage.layout import GraphStore
@@ -130,10 +142,13 @@ def run_engine(
     chunk_vertices: int,
     seed: int,
     backend: str = "numpy",
+    io_impl: str = "writeback",
 ):
     """Full run_layer on a real on-disk store.  ``impl`` selects BOTH the
     eviction-policy impl and the layer-tail impl (python = full scalar
-    oracle baseline, array = the vectorized engine)."""
+    oracle baseline, array = the vectorized engine); ``io_impl`` selects
+    the spill durability path (sync fsync-per-spill oracle vs async
+    write-back + group commit)."""
     d = feats.shape[1]
     specs = init_gnn_params("gcn", [d, 8], seed=seed)
     cfg = AtlasConfig(
@@ -143,6 +158,7 @@ def run_engine(
         policy_impl=impl,
         tail_impl=impl,
         backend=backend,
+        io_impl=io_impl,
         seed=seed,
     )
     with tempfile.TemporaryDirectory() as td:
@@ -157,16 +173,20 @@ def run_engine(
     return {
         "impl": impl,
         "backend": backend,
+        "io_impl": io_impl,
         "seconds": seconds,
         "chunks": m.chunks,
         "chunks_per_s": m.chunks / seconds,
         "vertices_per_s": csr.num_vertices / seconds,
         "evictions": m.evictions,
         "reloads": m.reloads,
+        "reload_pct_mean": m.reload_pct_mean,
         "tail_seconds": m.tail_seconds,
         "tail_rows_per_s": m.tail_rows_per_s,
         "transform_seconds": m.transform_seconds,
         "spill_seconds": m.spill_seconds,
+        "barrier_seconds": m.barrier_seconds,
+        "bytes_inflight": m.bytes_inflight,
         "output": out,
     }
 
@@ -283,6 +303,70 @@ def report_tail(results: dict) -> float:
     return tail_speedup
 
 
+def run_io_sweep(csr, feats, hot_fracs, chunk_vertices, seed, repeats):
+    """sync-vs-writeback spill durability across a hot-store sweep.
+
+    Per hot fraction: run the full engine under both io impls, assert the
+    dense spill outputs are bit-identical, and report the spill cost left
+    on the layer critical path (spill_seconds) with the group-commit
+    barrier broken out separately — plus reload% so the sweep charts
+    reload churn vs hot-store fraction like paper Fig 8."""
+    best = lambda runs: min(runs, key=lambda r: r["seconds"])
+    sweep = []
+    for hf in hot_fracs:
+        hot_slots = max(16, int(csr.num_vertices * hf))
+        res = {}
+        for io_impl in ("sync", "writeback"):
+            res[io_impl] = best([
+                run_engine(csr, feats, "array", hot_slots, chunk_vertices,
+                           seed, io_impl=io_impl)
+                for _ in range(repeats)
+            ])
+        out_s = res["sync"].pop("output")
+        out_w = res["writeback"].pop("output")
+        if not np.array_equal(out_s, out_w):
+            raise AssertionError(
+                f"io impls diverged (dense spill contents) at hot_frac={hf}"
+            )
+        assert res["sync"]["evictions"] == res["writeback"]["evictions"]
+        sweep.append({"hot_frac": hf, "hot_slots": hot_slots, **res})
+    return sweep
+
+
+def report_io(sweep) -> None:
+    print("\n== io (sync fsync-per-spill vs write-back group commit) ==")
+    print(
+        f"  {'hot_frac':>8} {'impl':>10} {'total':>9} {'spill(cp)':>10} "
+        f"{'barrier':>9} {'inflight':>10} {'reload%':>8}"
+    )
+    for row in sweep:
+        for impl in ("sync", "writeback"):
+            r = row[impl]
+            print(
+                f"  {row['hot_frac']:>8.3f} {impl:>10} {r['seconds']:>8.3f}s "
+                f"{r['spill_seconds']:>9.4f}s {r['barrier_seconds']:>8.4f}s "
+                f"{r['bytes_inflight']:>10} {r['reload_pct_mean']:>7.1f}%"
+            )
+        sy, wb = row["sync"], row["writeback"]
+        if wb["spill_seconds"] > 0:
+            print(
+                f"  {'':>8} critical-path spill time: "
+                f"{sy['spill_seconds'] / wb['spill_seconds']:.1f}x lower "
+                f"(writeback), spill contents bit-identical"
+            )
+
+
+def build_features(args, workdir: str):
+    """Dense in-RAM features, or an on-disk memmap for multi-M graphs."""
+    if args.mmap_features or args.vertices >= 1_000_000:
+        path = os.path.join(workdir, "features.npy")
+        print(f"features: memory-mapped {path}")
+        return make_features_mmap(
+            args.vertices, args.dim, path, seed=args.seed
+        )
+    return make_features(args.vertices, args.dim, seed=args.seed)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--vertices", type=int, default=120_000)
@@ -290,11 +374,21 @@ def main():
     ap.add_argument("--dim", type=int, default=16)
     ap.add_argument("--hot-frac", type=float, default=0.125,
                     help="hot slots as a fraction of vertices")
+    ap.add_argument("--hot-fracs", default=None,
+                    help="comma list of hot fractions for --mode io "
+                         "(default: just --hot-frac)")
     ap.add_argument("--chunk-vertices", type=int, default=4096)
-    ap.add_argument("--mode", choices=["micro", "engine", "both", "backend"],
+    ap.add_argument("--mode",
+                    choices=["micro", "engine", "both", "backend", "io"],
                     default="micro")
     ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"],
                     help="chunk-aggregation backend for --mode engine runs")
+    ap.add_argument("--io-impl", default="writeback",
+                    choices=["writeback", "sync"],
+                    help="spill durability impl for --mode engine runs")
+    ap.add_argument("--mmap-features", action="store_true",
+                    help="generate features into an on-disk .npy memmap "
+                         "(auto at --vertices >= 1M)")
     ap.add_argument("--repeats", type=int, default=3,
                     help="repetitions per impl; best (min-time) run is reported")
     ap.add_argument("--seed", type=int, default=0)
@@ -312,6 +406,7 @@ def main():
     all_results = {}
     best = lambda runs: min(runs, key=lambda r: r["seconds"])
     reps = max(1, args.repeats)
+    feat_td = tempfile.TemporaryDirectory(prefix="bench_delivery_feats_")
     if args.mode in ("micro", "both"):
         chunks = build_chunks(csr, args.chunk_vertices)
         res = {
@@ -323,11 +418,12 @@ def main():
         }
         all_results["micro"] = {**res, "speedup": report("micro (_deliver only)", res)}
     if args.mode in ("engine", "both"):
-        feats = make_features(args.vertices, args.dim, seed=args.seed)
+        feats = build_features(args, feat_td.name)
         res = {
             impl: best([
                 run_engine(csr, feats, impl, hot_slots, args.chunk_vertices,
-                           args.seed, backend=args.backend)
+                           args.seed, backend=args.backend,
+                           io_impl=args.io_impl)
                 for _ in range(reps)
             ])
             for impl in ("python", "array")
@@ -352,10 +448,25 @@ def main():
             **res, "speedup": speedup,
             "tail": tail, "tail_speedup": tail_speedup,
         }
+    if args.mode == "io":
+        # ISSUE 5: spill durability impls across a hot-store sweep, with
+        # the vectorized engine fixed so only io_impl varies
+        feats = build_features(args, feat_td.name)
+        hot_fracs = (
+            [float(x) for x in args.hot_fracs.split(",")]
+            if args.hot_fracs
+            else [args.hot_frac]
+        )
+        sweep = run_io_sweep(
+            csr, feats, hot_fracs, args.chunk_vertices, args.seed, reps
+        )
+        report_io(sweep)
+        print("  spill contents: bit-identical across io impls")
+        all_results["io"] = sweep
     if args.mode == "backend":
         # ROADMAP item: numpy vs jax chunk aggregation end-to-end, with the
         # array policy impl fixed so only the aggregation backend varies
-        feats = make_features(args.vertices, args.dim, seed=args.seed)
+        feats = build_features(args, feat_td.name)
         res = {
             backend: best([
                 run_engine(csr, feats, "array", hot_slots, args.chunk_vertices,
@@ -379,6 +490,7 @@ def main():
             )
         print(f"  speedup (jax over numpy): {speedup:.2f}x")
         all_results["backend"] = {**res, "jax_speedup": speedup}
+    feat_td.cleanup()
     if args.json == "-":
         print(json.dumps(all_results, indent=2))
     elif args.json:

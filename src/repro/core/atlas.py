@@ -7,12 +7,18 @@ Pipeline per layer (Fig 3):
         │ sequential, single-pass                 │ graduated buffers
         ▼                                         ▼
     sorted spill files  ◀──writer thread── graduation offload thread
-    of layer l-1                               (dense transform)
+    of layer l-1              │                (dense transform)
+                              ▼ arena hand-off (io_impl='writeback')
+                        write-back I/O thread: sort + serialize,
+                        group-commit fsync at the layer barrier
 
 Fault tolerance: a layer is a transaction.  The run manifest records
 completed layers and their spill files; a crash mid-layer discards that
 layer's partial spills on resume and replays it from the (immutable)
-previous layer.  The run loop itself lives in
+previous layer.  Under the write-back scheduler the layer's spills
+become durable at one group-commit barrier at the end of ``run_layer``
+— still strictly before the manifest advances, so the crash windows are
+unchanged.  The run loop itself lives in
 ``repro.session.AtlasSession.infer`` (``AtlasEngine.run`` is a
 deprecation shim over it); see
 tests/test_atlas_engine.py::test_resume_after_simulated_crash.
@@ -39,6 +45,7 @@ from repro.models.gnn import (
     self_coefficient,
 )
 from repro.storage.coldstore import ColdStore
+from repro.storage.io_scheduler import make_scheduler
 from repro.storage.iostats import IOStats
 from repro.storage.layout import GraphStore
 from repro.storage.reader import ChunkReader
@@ -60,6 +67,10 @@ class AtlasConfig:
     policy_impl: str = "array"  # 'array' (vectorized) | 'python' (scalar oracle)
     tail_impl: str = "array"  # layer tail (graduation buffers + spill
     # scatter): 'array' (ring buffers / argsort runs) | 'python' (oracle)
+    io_impl: str = "writeback"  # spill durability: 'writeback' (async
+    # write-back + one group-commit barrier per layer) | 'sync' (fsync
+    # per spill file on the flush path — the bit-identical oracle)
+    io_queue_depth: int = 8  # in-flight spill writes behind the scheduler
     threaded: bool = True  # dedicated reader/writer/offload threads
     prefetch_depth: int = 4
     seed: int = 0
@@ -88,8 +99,12 @@ class LayerMetrics:
     # array-native tail targets vs the shared transform/disk costs
     tail_seconds: float  # graduation buffering/emit + writer scatter
     transform_seconds: float  # dense layer update (W·x + b + σ)
-    spill_seconds: float  # write_spill: sort + disk + fsync
+    spill_seconds: float  # spill cost on the flush path: sort + disk +
+    # fsync under io_impl='sync', enqueue/arena-swap under 'writeback'
     tail_rows_per_s: float  # graduated rows / tail_seconds
+    # write-back group commit (io_impl='writeback'; zero under 'sync'):
+    barrier_seconds: float = 0.0  # the one durability wait per layer
+    bytes_inflight: int = 0  # scheduler queue highwater (bytes)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -187,29 +202,54 @@ class AtlasEngine:
             policy=policy,
             cold=cold,
         )
-        writer = EmbeddingWriter(
-            out_dir,
-            num_vertices=num_vertices,
-            dim=spec.out_dim,
-            dtype=np.float32,
-            num_partitions=cfg.num_partitions,
-            buffer_rows=cfg.spill_buffer_rows,
-            stats=write_stats,
-            queue_depth=cfg.queue_depth,
-            threaded=cfg.threaded,
-            ingest_impl=cfg.tail_impl,
-        )
-        grad = make_graduation(
-            cfg.tail_impl,
-            transform=lambda rows: layer_update(spec, rows),
-            sink=writer.write,
-            dim=spec.hot_width,
-            dtype=np.float32,
-            buffer_rows=cfg.graduation_rows,
-            queue_depth=cfg.queue_depth,
-            threaded=cfg.threaded,
-        )
-        aggregate = chunk_aggregate(cfg.backend)
+        # write-back scheduler: spill flushes become enqueue-and-continue;
+        # durability collapses into one group-commit barrier at layer end
+        # (before the caller's manifest advance).  io_impl='sync' keeps
+        # the fsync-per-spill path as the bit-identical oracle.
+        scheduler = make_scheduler(cfg.io_impl, queue_depth=cfg.io_queue_depth)
+        writer = None
+        try:
+            writer = EmbeddingWriter(
+                out_dir,
+                num_vertices=num_vertices,
+                dim=spec.out_dim,
+                dtype=np.float32,
+                num_partitions=cfg.num_partitions,
+                buffer_rows=cfg.spill_buffer_rows,
+                stats=write_stats,
+                queue_depth=cfg.queue_depth,
+                threaded=cfg.threaded,
+                ingest_impl=cfg.tail_impl,
+                scheduler=scheduler,
+            )
+            grad = make_graduation(
+                cfg.tail_impl,
+                transform=lambda rows: layer_update(spec, rows),
+                sink=writer.write,
+                dim=spec.hot_width,
+                dtype=np.float32,
+                buffer_rows=cfg.graduation_rows,
+                queue_depth=cfg.queue_depth,
+                threaded=cfg.threaded,
+            )
+            aggregate = chunk_aggregate(cfg.backend)
+        except BaseException:
+            # a failed constructor (bad tail_impl/backend) must not leak
+            # the already-spawned offload/io threads or the cold-store fd
+            # across retries in a long-lived process
+            cleanups = [cold.close]
+            if writer is not None:
+                cleanups.append(writer.close)
+            if scheduler is not None:
+                cleanups.append(
+                    lambda: scheduler.close(commit=False, raise_error=False)
+                )
+            for cleanup in cleanups:
+                try:
+                    cleanup()
+                except BaseException:
+                    pass
+            raise
         self_coef = self_coefficient(spec)
         agg_col = spec.in_dim if spec.kind == "sage" else 0
 
@@ -275,12 +315,32 @@ class AtlasEngine:
                     f"layer {layer_index}: wrote {writer.rows_written} rows, "
                     f"expected {num_vertices}"
                 )
+
+            # the layer's single durability point: drain the write-back
+            # queue and group-commit every spill (files + dirs) BEFORE the
+            # caller records the layer in the run manifest.  A crash
+            # before this point leaves the manifest un-advanced, so
+            # resume replays the layer from the previous (durable) one.
+            barrier_seconds = 0.0
+            bytes_inflight = 0
+            if scheduler is not None:
+                barrier_seconds = scheduler.barrier()
+                bytes_inflight = scheduler.qstats.bytes_inflight_peak
+                # the explicit barrier above already committed everything;
+                # close() only reclaims the I/O thread
+                scheduler.close(commit=False)
         except BaseException:
             # a failed layer is discarded and replayed (layer = transaction),
             # but a long-lived process must not leak the offload threads or
             # the cold-store fd across failed attempts: best-effort shutdown
-            # without masking the original error (close() is idempotent)
-            for cleanup in (grad.close, writer.close, cold.close):
+            # without masking the original error (close() is idempotent;
+            # the scheduler skips its commit — the partial output is dead)
+            cleanups = [grad.close, writer.close, cold.close]
+            if scheduler is not None:
+                cleanups.append(
+                    lambda: scheduler.close(commit=False, raise_error=False)
+                )
+            for cleanup in cleanups:
                 try:
                     cleanup()
                 except BaseException:
@@ -315,6 +375,8 @@ class AtlasEngine:
             transform_seconds=grad.transform_seconds,
             spill_seconds=writer.spill_seconds,
             tail_rows_per_s=grad.graduated / tail_seconds if tail_seconds else 0.0,
+            barrier_seconds=barrier_seconds,
+            bytes_inflight=bytes_inflight,
         )
         return layer_spills, m
 

@@ -25,6 +25,15 @@ Both impls share the offload-thread failure semantics of
 ``add``/``flush``/``close`` re-raise it (check-then-mutate, so buffered
 state is never corrupted by the raise), and producers can never deadlock
 on a dead consumer.
+
+Downstream, the sink (``EmbeddingWriter.write``) may itself front the
+write-back I/O scheduler (``repro.storage.io_scheduler``): a spill
+failure on the scheduler's thread re-raises out of the writer's enqueue
+as that worker's sticky error, is captured *here* as this stage's
+sticky error, and so surfaces to the engine loop through the same
+``add``/``flush``/``close`` protocol — three chained offload stages,
+one failure contract, and the group-commit barrier at the end of the
+layer catches anything still in flight.
 """
 
 from __future__ import annotations

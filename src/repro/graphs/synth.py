@@ -83,6 +83,38 @@ def make_features(
     return feats.astype(dtype)
 
 
+def make_features_mmap(
+    num_vertices: int,
+    feat_dim: int,
+    path: str,
+    dtype=np.float32,
+    seed: int = 0,
+    chunk_rows: int = 262_144,
+) -> np.ndarray:
+    """``make_features`` for graphs whose feature matrix should not live
+    in RAM: generate chunk by chunk straight into an on-disk ``.npy``
+    and return a read-only memmap view.  Identical values to
+    ``make_features`` for the same (num_vertices, feat_dim, seed) — the
+    generator stream is chunk-size-invariant because each chunk draws
+    exactly ``chunk_rows * feat_dim`` normals in row order.  This is how
+    the multi-M-vertex benchmarks feed ``GraphStore.create`` (which
+    itself streams row slices) without materialising V×d floats."""
+    rng = np.random.default_rng(seed)
+    out = np.lib.format.open_memmap(
+        path, mode="w+", dtype=np.dtype(dtype), shape=(num_vertices, feat_dim)
+    )
+    for s in range(0, num_vertices, max(1, chunk_rows)):
+        e = min(s + chunk_rows, num_vertices)
+        # same draw order and same ops as make_features, so the values
+        # are bit-identical to the in-RAM generator at any chunk size
+        out[s:e] = (
+            rng.standard_normal((e - s, feat_dim)) / np.sqrt(feat_dim)
+        ).astype(dtype)
+    out.flush()
+    del out
+    return np.load(path, mmap_mode="r")
+
+
 def community_graph(
     num_vertices: int,
     avg_degree: float,

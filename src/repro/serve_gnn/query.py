@@ -7,10 +7,13 @@ bounds — no id-column scan), resolves every id's row position with one
 batched binary search per touched *file* against that file's mmapped id
 column, consults the page cache, and coalesces the misses into block
 reads issued in ascending block order, i.e. sequential within each
-file.  Copying rows out is then a single fancy-index scatter per block
-run — no per-block searchsorted or bounds checks on the hot path.  Rows
-come back in request order, bit-identical to the rows
-``spills_to_dense`` would materialise for the same spill set.
+file.  Runs of missed blocks that are physically contiguous (consecutive
+block keys in one file) collapse into a single span pread and a single
+fancy-index gather for every requested row they cover — no per-block
+syscall, buffer, or scatter on a cold range scan (``coalesce=False``
+keeps the per-block path as the bit-identity oracle).  Rows come back in
+request order, bit-identical to the rows ``spills_to_dense`` would
+materialise for the same spill set.
 
 Ids absent from the layer raise ``KeyError`` — absence is detected for
 free: either no file/block id-range covers the id (no I/O at all), or
@@ -40,14 +43,18 @@ class VertexQueryEngine:
         layer: ServableLayer,
         cache: ShardedPageCache | None = None,
         stats: IOStats | None = None,
+        coalesce: bool = True,
     ):
         self.layer = layer
         self.cache = cache
         self.stats = stats if stats is not None else IOStats()
+        self.coalesce = coalesce  # span-read + single-gather fast path
         self.queries = 0
         self.rows_served = 0
         self.blocks_read = 0  # cumulative disk block fetches
         self.last_blocks_read = 0  # disk block fetches of the last lookup
+        self.span_reads = 0  # coalesced preads issued for missed blocks
+        self.coalesced_blocks = 0  # blocks covered by multi-block spans
 
     # ------------------------------------------------------------ lookup
     def lookup(self, vertex_ids: np.ndarray) -> np.ndarray:
@@ -82,29 +89,80 @@ class VertexQueryEngine:
         blocks: list = [None] * len(need_keys)
         if self.cache is not None:
             blocks = self.cache.get_many(need_keys)
-        miss = [i for i, b in enumerate(blocks) if b is None]
-        if miss:
-            # need_keys is sorted, so misses are fetched in ascending block
-            # order — one open per file, sequential reads within it; block
-            # id columns are neither read nor cached (row addressing is
-            # resolved against the file-level id columns above)
-            fetched = self.layer.read_blocks_by_keys(
-                need_keys[np.asarray(miss)], stats=self.stats, with_ids=False
-            )
-            for i, blk in zip(miss, fetched):
-                blocks[i] = blk
+        miss = np.flatnonzero(np.asarray([b is None for b in blocks]))
+        out = np.empty((len(uids), self.layer.dim), dtype=self.layer.dtype)
+        scattered = np.zeros(len(need_keys), dtype=bool)
+        if len(miss):
             self.last_blocks_read = len(miss)
             self.blocks_read += len(miss)
+            if self.coalesce:
+                self._fetch_coalesced(
+                    miss, need_keys, f[starts], starts, ends, gkey, local,
+                    blocks, out, scattered,
+                )
+            else:
+                # oracle path: one fetch + one scatter per missed block
+                fetched = self.layer.read_blocks_by_keys(
+                    need_keys[miss], stats=self.stats, with_ids=False
+                )
+                for i, blk in zip(miss.tolist(), fetched):
+                    blocks[i] = blk
             if self.cache is not None:
-                mi = np.asarray(miss, dtype=np.int64)
-                self.cache.put_many(need_keys[mi], [blocks[i] for i in miss])
+                self.cache.put_many(
+                    need_keys[miss], [blocks[i] for i in miss.tolist()]
+                )
 
-        out = np.empty((len(uids), self.layer.dim), dtype=self.layer.dtype)
-        for j in range(len(need_keys)):
+        # cache hits (and, on the oracle path, the fetched blocks): one
+        # fancy-index scatter per block
+        for j in np.flatnonzero(~scattered).tolist():
             lo, hi = starts[j], ends[j]
             out[lo:hi] = blocks[j][1][local[lo:hi]]
         self.rows_served += len(q)
         return out[inv]
+
+    def _fetch_coalesced(
+        self, miss, need_keys, need_f, starts, ends, gkey, local,
+        blocks, out, scattered,
+    ) -> None:
+        """Fetch missed blocks as contiguous spans and gather their rows.
+
+        A span is a maximal run of missed blocks with consecutive global
+        keys in one file — physically adjacent on disk, so the span is
+        ONE pread, and because consecutive need_keys own adjacent uid
+        slices, every requested row it covers lands in ``out`` with ONE
+        fancy-index gather (a cold range scan does no per-block work at
+        all).  Per-block copies are sliced out only for the page cache,
+        which must own its entries (a view would pin the whole span
+        buffer against the cache's byte budget)."""
+        brk = np.flatnonzero(
+            (np.diff(miss) != 1)
+            | (np.diff(need_keys[miss]) != 1)
+            | (np.diff(need_f[miss]) != 0)
+        )
+        bounds = np.r_[0, brk + 1, len(miss)]
+        no_ids = np.empty(0, dtype=np.uint64)
+        for s in range(len(bounds) - 1):
+            j0 = int(miss[bounds[s]])
+            j1 = int(miss[bounds[s + 1] - 1])
+            fi = int(need_f[j0])
+            base = int(self.layer.block_base[fi])
+            b0 = int(need_keys[j0]) - base
+            b1 = int(need_keys[j1]) - base + 1
+            span = self.layer.read_block_rows_span(fi, b0, b1, stats=self.stats)
+            bw = int(self.layer.file_block_rows[fi])
+            lo, hi = int(starts[j0]), int(ends[j1])
+            pos = (gkey[lo:hi] - int(need_keys[j0])) * bw + local[lo:hi]
+            out[lo:hi] = span[pos]
+            scattered[j0 : j1 + 1] = True
+            self.span_reads += 1
+            if b1 - b0 > 1:
+                self.coalesced_blocks += b1 - b0
+            if self.cache is not None:
+                idx = self.layer.indexes[fi]
+                for j in range(j0, j1 + 1):
+                    off = (j - j0) * bw
+                    n = idx.rows_in_block(b0 + (j - j0))
+                    blocks[j] = (no_ids, span[off : off + n].copy())
 
     @staticmethod
     def _raise_missing(ids: np.ndarray) -> None:
@@ -120,6 +178,8 @@ class VertexQueryEngine:
             "queries": self.queries,
             "rows_served": self.rows_served,
             "blocks_read": self.blocks_read,
+            "span_reads": self.span_reads,
+            "coalesced_blocks": self.coalesced_blocks,
             **{f"io_{k}": v for k, v in self.stats.snapshot().items()},
         }
         if self.cache is not None:

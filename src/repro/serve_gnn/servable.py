@@ -43,12 +43,20 @@ def compact_spills(
     rows_per_file: int = DEFAULT_ROWS_PER_FILE,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     stats: IOStats | None = None,
+    scheduler=None,
 ) -> list[str]:
     """Merge an overlapping spill set into disjoint sorted servable files.
 
     Memory stays bounded: only the id columns (8 bytes/row) are held to
     compute the global cut points; row data streams through one target
     file at a time via the existing merge-on-read range reads.
+
+    With a ``repro.storage.io_scheduler.WritebackIOScheduler``, each
+    target file is handed off to the I/O thread (the merged arrays are
+    freshly allocated, so the hand-off is by reference) and durability
+    is deferred to the caller's group-commit barrier — the publish path
+    barriers once before renaming the staged version dir into place.
+    Without one, every file is written + fsynced inline (sync oracle).
     """
     if not spills.files:
         raise ValueError("cannot compact an empty spill set")
@@ -79,9 +87,16 @@ def compact_spills(
         ids, rows = ids[order], rows[order]
         assert len(ids) == end - start
         path = os.path.join(out_dir, f"servable_{i:05d}.spill")
-        write_spill(
-            path, ids, rows, stats=stats, presorted=True, block_rows=block_rows
-        )
+        if scheduler is not None:
+            scheduler.submit_spill(
+                path, ids, rows, stats=stats, presorted=True,
+                block_rows=block_rows,
+            )
+        else:
+            write_spill(
+                path, ids, rows, stats=stats, presorted=True,
+                block_rows=block_rows,
+            )
         paths.append(path)
     return paths
 
@@ -228,6 +243,20 @@ class ServableLayer:
             pos[~ok] = -1
             rowpos[sel] = pos
         return rowpos
+
+    def read_block_rows_span(
+        self, fi: int, b0: int, b1: int, stats: IOStats | None = None
+    ) -> np.ndarray:
+        """Rows of blocks ``[b0, b1)`` of file ``fi`` as ONE contiguous
+        pread.  A file's data section is its sorted rows back to back, so
+        consecutive blocks are physically adjacent — a run of missed
+        blocks costs one syscall and one buffer instead of one per
+        block.  The serving fast path gathers straight out of the
+        returned span (``VertexQueryEngine.lookup``)."""
+        idx = self.indexes[fi]
+        r0 = b0 * idx.block_rows
+        r1 = min(b1 * idx.block_rows, idx.num_rows)
+        return self.files[fi].read_rows(r0, r1, stats=stats)
 
     def read_block_by_key(
         self, gkey: int, stats: IOStats | None = None

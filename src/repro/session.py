@@ -19,8 +19,18 @@ Versioning (MVCC): every ``publish`` compacts into a fresh
 current-version pointer atomically; version directories are immutable.
 ``reader`` pins (refcounts) the version current at open time, so a
 concurrent re-publish never changes or deletes rows under a live reader;
-unpinned stale versions are garbage-collected on the next publish.  Pins
-are per-session, in-process state — one publishing session per store.
+unpinned stale versions are garbage-collected on the next publish —
+all of them by default, or all but the newest ``retain=N`` historical
+ones (pinned versions never count against the budget).  Pins are
+per-session, in-process state — one publishing session per store.
+
+Durability: with ``AtlasConfig.io_impl="writeback"`` (default) the
+session owns a write-back I/O scheduler; publishes stream staged files
+through it and group-commit them (one barrier: files + dirs fsynced)
+strictly before the version rename and manifest swap, and the engine
+barriers each layer before ``infer`` records it in the run manifest —
+so every crash window resolves to "manifest un-advanced, replay/retry"
+(docs/delivery_core.md, "Durability model").
 
 The run side is resumable: ``infer`` records completed layers in a
 schema-versioned ``run_manifest.json`` (``RunManifest``); ``resume=True``
@@ -46,6 +56,7 @@ from repro.models.gnn import GNNLayerSpec
 from repro.serve_gnn.page_cache import ShardedPageCache
 from repro.serve_gnn.query import VertexQueryEngine
 from repro.serve_gnn.servable import ServableLayer
+from repro.storage.io_scheduler import make_scheduler
 from repro.storage.iostats import IOStats
 from repro.storage.layout import GraphStore
 from repro.storage.spill import DEFAULT_BLOCK_ROWS, SpillFile, SpillSet
@@ -279,6 +290,21 @@ class AtlasSession:
         self._published_layers: set[int] = set()
         self._last_result: RunResult | None = None
         self._session_closed = False
+        self._io_sched = None  # lazy write-back scheduler for publishes
+
+    def _publish_scheduler(self):
+        """The session's write-back scheduler for publish/compaction
+        (None when the engine config runs ``io_impl='sync'``).  Created
+        lazily and only used under ``_publish_lock``; ``close`` tears it
+        down."""
+        if self.engine.config.io_impl == "sync":
+            return None
+        if self._io_sched is None or self._io_sched.closed:
+            self._io_sched = make_scheduler(
+                self.engine.config.io_impl,
+                queue_depth=self.engine.config.io_queue_depth,
+            )
+        return self._io_sched
 
     # ------------------------------------------------------------ context
     def __enter__(self) -> "AtlasSession":
@@ -297,6 +323,10 @@ class AtlasSession:
             r.close()
         for layer in sorted(self._published_layers):
             self.gc(layer)
+        if self._io_sched is not None:
+            # publishes barrier before returning, so this drains an idle
+            # queue — it only reclaims the I/O thread
+            self._io_sched.close(raise_error=False)
 
     @property
     def run_manifest_path(self) -> str:
@@ -388,24 +418,42 @@ class AtlasSession:
         block_rows: int = DEFAULT_BLOCK_ROWS,
         rows_per_file: int | None = None,
         stats: IOStats | None = None,
+        retain: int = 0,
     ) -> PublishedVersion:
         """Compact one layer's spills into a new epoch-numbered servable
         version and atomically swap the store's current-version pointer.
         ``layer`` is a ``LayerHandle`` (e.g. ``result.final``), or a layer
         number — resolved against ``spills`` when given, else against the
-        session's last ``infer`` result.  Stale versions not pinned by an
-        open reader are garbage-collected before returning."""
+        session's last ``infer`` result.
+
+        Retention: at most ``retain`` *unpinned* historical (non-current)
+        versions survive this publish — the newest ones; the rest are
+        garbage-collected before returning.  Versions pinned by an open
+        reader always survive and do not count against ``retain``.  The
+        default ``retain=0`` keeps the original collect-everything-stale
+        behavior."""
         handle = self._resolve(layer, spills)
         with self._publish_lock:
-            info = self.store.publish_servable_layer(
-                handle.layer,
-                handle.spills,
-                block_rows=block_rows,
-                rows_per_file=rows_per_file,
-                stats=stats,
-            )
+            scheduler = self._publish_scheduler()
+            try:
+                info = self.store.publish_servable_layer(
+                    handle.layer,
+                    handle.spills,
+                    block_rows=block_rows,
+                    rows_per_file=rows_per_file,
+                    stats=stats,
+                    scheduler=scheduler,
+                )
+            except BaseException:
+                # a failed publish may leave the scheduler with a sticky
+                # I/O error: retire it (skip its commit — the staged
+                # version is dead) so a retry starts clean
+                if scheduler is not None:
+                    scheduler.close(commit=False, raise_error=False)
+                    self._io_sched = None
+                raise
             self._published_layers.add(handle.layer)
-            removed = self._gc_locked(handle.layer)
+            removed = self._gc_locked(handle.layer, retain=retain)
         return PublishedVersion(
             layer=handle.layer,
             epoch=info["epoch"],
@@ -438,30 +486,39 @@ class AtlasSession:
             )
         return self._last_result.layers[layer]
 
-    def gc(self, layer: int) -> list[int]:
-        """Drop every stale (non-current) version of ``layer`` that no open
-        reader pins.  Returns the collected epoch numbers."""
+    def gc(self, layer: int, retain: int = 0) -> list[int]:
+        """Drop stale (non-current) versions of ``layer`` that no open
+        reader pins, keeping the newest ``retain`` unpinned ones.
+        Returns the collected epoch numbers."""
         with self._publish_lock:  # never concurrent with a manifest write
-            return self._gc_locked(layer)
+            return self._gc_locked(layer, retain=retain)
 
-    def _gc_locked(self, layer: int) -> list[int]:
+    def _gc_locked(self, layer: int, retain: int = 0) -> list[int]:
         """GC body; caller holds ``_publish_lock``.
 
         Only the manifest retirement happens under the pin lock; the
         (potentially large) file deletion runs after it is released, so
         concurrent ``reader`` opens never stall on disk I/O."""
+        retain = max(0, int(retain))
         with self._lock:
             try:
                 current = self.store.current_servable_epoch(layer)
             except KeyError:
                 return []
             retired: list[tuple[int, dict]] = []
-            for epoch in self.store.servable_versions(layer):
-                if epoch != current and not self._pins.get((layer, epoch)):
-                    info = self.store.drop_servable_version(
-                        layer, epoch, delete_files=False
-                    )
-                    retired.append((epoch, info))
+            kept_unpinned = 0
+            # newest-first, so the `retain` most recent unpinned
+            # historical versions survive and everything older goes
+            for epoch in sorted(self.store.servable_versions(layer), reverse=True):
+                if epoch == current or self._pins.get((layer, epoch)):
+                    continue
+                if kept_unpinned < retain:
+                    kept_unpinned += 1
+                    continue
+                info = self.store.drop_servable_version(
+                    layer, epoch, delete_files=False
+                )
+                retired.append((epoch, info))
         for _, info in retired:
             self.store.delete_servable_files(layer, info)
         return [e for e, _ in retired]

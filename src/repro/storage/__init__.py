@@ -1,5 +1,6 @@
-from repro.storage.iostats import IOStats
+from repro.storage.iostats import IOStats, QueueStats
 from repro.storage.spill import SpillFile, SpillSet, write_spill
+from repro.storage.io_scheduler import WritebackIOScheduler, make_scheduler
 from repro.storage.layout import GraphStore
 from repro.storage.reader import Chunk, ChunkReader
 from repro.storage.writer import EmbeddingWriter
@@ -7,9 +8,12 @@ from repro.storage.coldstore import ColdStore
 
 __all__ = [
     "IOStats",
+    "QueueStats",
     "SpillFile",
     "SpillSet",
     "write_spill",
+    "WritebackIOScheduler",
+    "make_scheduler",
     "GraphStore",
     "Chunk",
     "ChunkReader",

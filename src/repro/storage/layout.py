@@ -234,6 +234,7 @@ class GraphStore:
         block_rows: int = DEFAULT_BLOCK_ROWS,
         rows_per_file: int | None = None,
         stats: IOStats | None = None,
+        scheduler=None,
     ) -> dict:
         """Compact one layer's (possibly overlapping) spill set into a new
         epoch-numbered servable version directory and swap the manifest's
@@ -241,10 +242,18 @@ class GraphStore:
         version-info dict (``epoch``, ``dir``, ``files``, ``block_rows``,
         ``num_rows``, ``dim``, ``dtype``).
 
+        With a write-back ``scheduler`` the staged files stream through
+        its I/O thread and the whole staged version dir is
+        **group-committed** — one ``barrier()`` fsyncing every file plus
+        the staging dir — strictly before the rename into place and the
+        manifest pointer swap, preserving the publish crash-consistency
+        ordering (data durable → rename → manifest).
+
         Existing versions are never modified or removed here — see
         ``drop_servable_version`` / ``AtlasSession.publish`` for GC.
         """
         from repro.serve_gnn.servable import DEFAULT_ROWS_PER_FILE, compact_spills
+        from repro.storage.io_scheduler import fsync_dir
 
         entry = self._servable_entry(layer, create=True)
         epoch = int(entry.get("next_epoch") or 1)
@@ -262,10 +271,20 @@ class GraphStore:
                 rows_per_file=rows_per_file or DEFAULT_ROWS_PER_FILE,
                 block_rows=block_rows,
                 stats=stats,
+                scheduler=scheduler,
             )
+            if scheduler is not None:
+                # group commit: every staged file (and the staging dir)
+                # durable before the version can be renamed into place
+                scheduler.barrier()
             if os.path.exists(out_dir):  # leftover of a crashed, unrecorded publish
                 shutil.rmtree(out_dir)
             os.replace(tmp_dir, out_dir)
+            if scheduler is not None:
+                # make the rename itself durable before the manifest
+                # records the version
+                fsync_dir(self._layer_base_dir(layer))
+                fsync_dir(self.root)
             files = [
                 os.path.join(out_dir, os.path.basename(p)) for p in tmp_files
             ]

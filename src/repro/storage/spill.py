@@ -220,13 +220,28 @@ def write_spill(
     presorted: bool = False,
     block_rows: int | None = DEFAULT_BLOCK_ROWS,
     scratch: tuple[np.ndarray, np.ndarray] | None = None,
+    durability: str = "fsync",
 ) -> "SpillFile":
     """Sort (ids, rows) by id and write one spill file atomically.
 
     ``scratch`` is an optional caller-owned ``(ids_buf, rows_buf)`` pair
     the sorted copy is gathered into (``np.take(..., out=...)``), so a
     high-frequency writer (the layer tail's per-partition flusher) reuses
-    one arena instead of allocating two fresh arrays per spill."""
+    one arena instead of allocating two fresh arrays per spill.
+
+    ``durability`` splits serialization from persistence:
+
+    * ``"fsync"`` (default) — flush + fsync before the atomic rename, so
+      the published file is durable the moment this returns.
+    * ``"deferred"`` — serialize and rename only; the caller owns
+      durability and must group-commit the file (and its directory)
+      before any manifest references it — see
+      ``repro.storage.io_scheduler.WritebackIOScheduler.barrier``.
+    """
+    if durability not in ("fsync", "deferred"):
+        raise ValueError(
+            f"unknown durability {durability!r} (want 'fsync'|'deferred')"
+        )
     ids = np.asarray(ids, dtype=np.uint64)
     rows = np.ascontiguousarray(rows)
     if rows.ndim != 2 or len(ids) != len(rows):
@@ -263,8 +278,9 @@ def write_spill(
         f.write(header)
         f.write(ids.tobytes())
         f.write(rows.tobytes())
-        f.flush()
-        os.fsync(f.fileno())
+        if durability == "fsync":
+            f.flush()
+            os.fsync(f.fileno())
     os.replace(tmp, path)  # atomic publish: readers never see partial files
     if stats is not None:
         stats.add_write(len(header) + ids.nbytes + rows.nbytes)

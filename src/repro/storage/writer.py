@@ -23,6 +23,18 @@ is sticky — ``write`` re-raises it instead of blocking on a full queue,
 and ``close`` first flushes whatever is still buffered (so already-queued
 rows are never stranded in memory) and then re-raises, deterministically:
 either close() returns a complete spill set or it raises.
+
+Disk hand-off (``scheduler``): with a
+``repro.storage.io_scheduler.WritebackIOScheduler``, a full partition
+arena is handed to the I/O thread by reference (the writer leases a
+recycled arena back) and ``_flush_partition`` returns without touching
+disk — sorting, serialization, and durability (group commit at the
+layer barrier) all happen downstream, so ``spill_seconds`` shrinks to
+the enqueue cost.  Without a scheduler the flush is the original
+synchronous ``write_spill`` with per-file fsync (the
+``io_impl="sync"`` oracle).  Scheduler errors ride the same sticky
+protocol: they re-raise out of ``write``/``close`` or, at the latest,
+out of the owner's ``barrier()``.
 """
 
 from __future__ import annotations
@@ -52,6 +64,7 @@ class EmbeddingWriter:
         queue_depth: int = 20,
         threaded: bool = True,
         ingest_impl: str = "array",
+        scheduler=None,
     ):
         self.out_dir = out_dir
         os.makedirs(out_dir, exist_ok=True)
@@ -61,6 +74,7 @@ class EmbeddingWriter:
         self.buffer_rows = max(1, buffer_rows)
         self.stats = stats if stats is not None else IOStats()
         self.spills = SpillSet()
+        self.scheduler = scheduler  # borrowed: the owner barriers/closes it
         if ingest_impl not in ("array", "python"):
             raise ValueError(
                 f"unknown ingest impl {ingest_impl!r} (want 'array'|'python')"
@@ -69,9 +83,17 @@ class EmbeddingWriter:
         P = num_partitions
         if ingest_impl == "array":
             # preallocated per-partition arenas + one shared sort scratch:
-            # every batch and every flush moves through reused memory
-            self._arena_ids = np.empty((P, self.buffer_rows), dtype=np.uint64)
-            self._arena_rows = np.empty((P, self.buffer_rows, dim), dtype=self.dtype)
+            # every batch and every flush moves through reused memory.
+            # Separate arrays per partition (not one [P, R, d] block) so a
+            # full arena can be handed to the write-back scheduler whole
+            # and swapped for a recycled one.
+            self._arena_ids = [
+                np.empty(self.buffer_rows, dtype=np.uint64) for _ in range(P)
+            ]
+            self._arena_rows = [
+                np.empty((self.buffer_rows, dim), dtype=self.dtype)
+                for _ in range(P)
+            ]
             self._scratch_ids = np.empty(self.buffer_rows, dtype=np.uint64)
             self._scratch_rows = np.empty((self.buffer_rows, dim), dtype=self.dtype)
         else:
@@ -133,10 +155,10 @@ class EmbeddingWriter:
                 idx = order[pos : pos + take]
                 # mode="clip" writes straight into the arena (indices are
                 # argsort output, always in range; "raise" may buffer)
-                np.take(ids, idx, out=self._arena_ids[p, fill : fill + take],
+                np.take(ids, idx, out=self._arena_ids[p][fill : fill + take],
                         mode="clip")
                 np.take(rows, idx, axis=0, mode="clip",
-                        out=self._arena_rows[p, fill : fill + take])
+                        out=self._arena_rows[p][fill : fill + take])
                 self._buf_count[p] = fill + take
                 pos += take
                 if self._buf_count[p] == self.buffer_rows:
@@ -168,8 +190,8 @@ class EmbeddingWriter:
             return
         t0 = time.perf_counter()
         if self.ingest_impl == "array":
-            ids = self._arena_ids[p, :n]
-            rows = self._arena_rows[p, :n]
+            ids = self._arena_ids[p][:n]
+            rows = self._arena_rows[p][:n]
             scratch = (self._scratch_ids, self._scratch_rows)
         else:
             ids = np.concatenate(self._buf_ids[p])
@@ -184,7 +206,32 @@ class EmbeddingWriter:
         path = os.path.join(self.out_dir, f"spill_p{p:04d}_{seq:06d}.spill")
         t1 = time.perf_counter()
         w0 = time.perf_counter()
-        sf = write_spill(path, ids, rows, stats=self.stats, scratch=scratch)
+        if self.scheduler is not None:
+            if self.ingest_impl == "array":
+                # hand the whole arena over (the I/O thread sorts and
+                # writes from it, then recycles it) and lease a
+                # replacement: the flush never blocks on disk
+                sf = self.scheduler.submit_spill(
+                    path,
+                    self._arena_ids[p],
+                    self._arena_rows[p],
+                    num_rows=n,
+                    stats=self.stats,
+                    recycle=True,
+                )
+                self._arena_ids[p], self._arena_rows[p] = (
+                    self.scheduler.lease_arena(
+                        self.buffer_rows, self.dim, self.dtype
+                    )
+                )
+            else:
+                # python oracle buffers are freshly concatenated arrays:
+                # hand them over by reference, nothing to recycle
+                sf = self.scheduler.submit_spill(
+                    path, ids, rows, stats=self.stats
+                )
+        else:
+            sf = write_spill(path, ids, rows, stats=self.stats, scratch=scratch)
         w1 = time.perf_counter()
         with self._lock:
             self.spills.add(sf)

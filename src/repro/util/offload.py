@@ -79,6 +79,17 @@ class OffloadWorker:
                 # below guarantees this check eventually observes it
                 self.raise_pending()
 
+    def drain(self) -> None:
+        """Block until every item submitted so far has been consumed —
+        processed by ``fn`` or discarded through ``on_drop`` after an
+        error.  This is the write-back scheduler's barrier primitive: it
+        waits for in-flight work without shutting the consumer down, and
+        it cannot hang on a dead consumer because the loop keeps draining
+        (and acknowledging) items after an error.  A deferred error is
+        NOT raised here; callers sequence ``raise_pending`` themselves.
+        """
+        self._q.join()
+
     def close(self, raise_error: bool = True) -> BaseException | None:
         """Send the sentinel, join the consumer, and surface any deferred
         error — raised (default) or returned so the caller can sequence
@@ -98,14 +109,20 @@ class OffloadWorker:
         while True:
             item = self._q.get()
             if item is None:
+                self._q.task_done()
                 return
-            if self._err:
-                if self._on_drop is not None:
-                    self._on_drop(item)
-                continue
             try:
-                self._fn(item)
-            except BaseException as exc:  # noqa: BLE001 - deferred to producer
-                self._err.append(exc)
-                if self._on_drop is not None:
-                    self._on_drop(item)
+                if self._err:
+                    if self._on_drop is not None:
+                        self._on_drop(item)
+                    continue
+                try:
+                    self._fn(item)
+                except BaseException as exc:  # noqa: BLE001 - deferred to producer
+                    self._err.append(exc)
+                    if self._on_drop is not None:
+                        self._on_drop(item)
+            finally:
+                # every item is acknowledged exactly once, even on the
+                # error/drop paths, so drain() always terminates
+                self._q.task_done()

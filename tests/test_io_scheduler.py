@@ -1,0 +1,336 @@
+"""The write-back I/O scheduler: group-commit durability semantics,
+failure paths, and bit-identity with the synchronous oracle
+(docs/delivery_core.md "durability model").
+
+The contract under test: spill writes are enqueue-and-continue, bytes
+become durable at one barrier per layer/publish, and every failure mode
+surfaces — at the submit, at the barrier, or at close — never as a
+silently incomplete spill set with an advanced manifest.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import repro.storage.io_scheduler as sched_mod
+from repro.core.atlas import AtlasConfig, spills_to_dense
+from repro.graphs.synth import make_features, powerlaw_graph
+from repro.models.gnn import init_gnn_params
+from repro.session import AtlasSession
+from repro.storage.io_scheduler import WritebackIOScheduler, make_scheduler
+from repro.storage.layout import GraphStore
+from repro.storage.spill import SpillFile
+from repro.storage.writer import EmbeddingWriter
+
+from tests.conftest import build_store
+
+
+def run_session(tmp, csr, feats, specs, io_impl, **cfg_kw):
+    store = build_store(tmp, csr, feats, num_partitions=2)
+    cfg = AtlasConfig(
+        chunk_bytes=64 * feats.shape[1] * 4,
+        hot_slots=csr.num_vertices // 4,
+        spill_buffer_rows=64,
+        io_impl=io_impl,
+        **cfg_kw,
+    )
+    session = AtlasSession(store, config=cfg, workdir=str(tmp / "work"))
+    return session, session.infer(specs)
+
+
+# --------------------------------------------------------------------------
+# Bit-identity with the synchronous oracle
+# --------------------------------------------------------------------------
+
+
+def test_writeback_spills_bit_identical_to_sync(tmp_path):
+    """Same file names, same bytes: only *when* durability happens moves."""
+    v, d = 1500, 12
+    csr = powerlaw_graph(v, 6, seed=21)
+    feats = make_features(v, d, seed=21)
+    specs = init_gnn_params("gcn", [d, 8], seed=2)
+    raw = {}
+    for impl in ("sync", "writeback"):
+        session, result = run_session(
+            tmp_path / impl, csr, feats, specs, impl
+        )
+        m = result.metrics[0]
+        if impl == "writeback":
+            assert m.barrier_seconds > 0.0
+            assert m.bytes_inflight > 0
+        else:
+            assert m.barrier_seconds == 0.0 and m.bytes_inflight == 0
+        raw[impl] = {
+            os.path.basename(f.path): open(f.path, "rb").read()
+            for f in result.final.spills.files
+        }
+        session.close()
+    assert raw["sync"].keys() == raw["writeback"].keys()
+    for name in raw["sync"]:
+        assert raw["sync"][name] == raw["writeback"][name], name
+
+
+# --------------------------------------------------------------------------
+# Failure paths
+# --------------------------------------------------------------------------
+
+
+def test_consumer_death_surfaces_at_barrier_not_silently(tmp_path):
+    """An I/O-thread write failure is sticky: the barrier re-raises it
+    (and later submits re-raise too) — queued rows are never silently
+    dropped behind a clean-looking return."""
+    sched = WritebackIOScheduler(queue_depth=2)
+    ids = np.arange(32, dtype=np.uint64)
+    rows = np.ones((32, 4), dtype=np.float32)
+    # a path whose parent directory does not exist: open() fails on the
+    # I/O thread, not at submit time
+    sched.submit_spill(str(tmp_path / "nope" / "a.spill"), ids, rows)
+    with pytest.raises(FileNotFoundError):
+        sched.barrier()
+    with pytest.raises(FileNotFoundError):
+        sched.submit_spill(str(tmp_path / "b.spill"), ids, rows)
+    with pytest.raises(FileNotFoundError):
+        sched.close()
+    # accounting: the dropped task released its in-flight bytes
+    assert sched.qstats.bytes_inflight == 0
+    assert sched.qstats.dropped + sched.qstats.completed == sched.qstats.enqueued
+
+
+def test_writer_error_reaches_engine_before_manifest(tmp_path, monkeypatch):
+    """With the physical write failing on the scheduler thread, the layer
+    must fail (sticky error via submit or barrier) rather than complete
+    with fewer rows than vertices."""
+    v, d = 600, 8
+    csr = powerlaw_graph(v, 5, seed=23)
+    feats = make_features(v, d, seed=23)
+    specs = init_gnn_params("gcn", [d, 4], seed=3)
+
+    real_write = sched_mod.write_spill
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] > 3:
+            raise OSError("disk full")
+        return real_write(*a, **kw)
+
+    monkeypatch.setattr(sched_mod, "write_spill", flaky)
+    store = build_store(tmp_path, csr, feats, num_partitions=2)
+    cfg = AtlasConfig(
+        chunk_bytes=64 * d * 4, hot_slots=v, spill_buffer_rows=16,
+        io_impl="writeback",
+    )
+    session = AtlasSession(store, config=cfg, workdir=str(tmp_path / "work"))
+    with pytest.raises(OSError, match="disk full"):
+        session.infer(specs)
+    # the failed layer never reached the manifest
+    assert not os.path.exists(session.run_manifest_path) or (
+        __import__("json").load(open(session.run_manifest_path))[
+            "completed_layers"
+        ] == 0
+    )
+
+
+def test_kill_before_barrier_leaves_manifest_unadvanced(tmp_path, monkeypatch):
+    """A crash after the layer's spills are queued/written but before the
+    group-commit barrier must leave the run manifest un-advanced, so
+    resume=True replays the layer and produces bit-identical output."""
+    v, d = 900, 12
+    csr = powerlaw_graph(v, 5, seed=31)
+    feats = make_features(v, d, seed=31)
+    specs = init_gnn_params("gcn", [d, 10, 6], seed=7)
+
+    # reference run, untouched
+    ref_session, ref = run_session(tmp_path / "ref", csr, feats, specs, "writeback")
+    ref_out = spills_to_dense(ref.final.spills, v, 6)
+    ref_session.close()
+
+    real_barrier = WritebackIOScheduler.barrier
+    state = {"barriers": 0}
+
+    def crashing_barrier(self):
+        state["barriers"] += 1
+        if state["barriers"] == 2:  # layer 0 commits; layer 1 dies pre-commit
+            raise KeyboardInterrupt("simulated preemption before group commit")
+        return real_barrier(self)
+
+    monkeypatch.setattr(WritebackIOScheduler, "barrier", crashing_barrier)
+    store = build_store(tmp_path / "crash", csr, feats, num_partitions=2)
+    cfg = AtlasConfig(
+        chunk_bytes=64 * d * 4, hot_slots=v // 4, spill_buffer_rows=64,
+        io_impl="writeback",
+    )
+    session = AtlasSession(
+        store, config=cfg, workdir=str(tmp_path / "crash" / "work")
+    )
+    with pytest.raises(KeyboardInterrupt):
+        session.infer(specs)
+    manifest = __import__("json").load(open(session.run_manifest_path))
+    assert manifest["completed_layers"] == 1  # layer 2 never committed
+
+    monkeypatch.setattr(WritebackIOScheduler, "barrier", real_barrier)
+    result = session.infer(specs, resume=True)
+    assert [m.layer for m in result.metrics] == [1]  # only the dead layer
+    assert np.array_equal(spills_to_dense(result.final.spills, v, 6), ref_out)
+    session.close()
+
+
+def test_close_drains_outstanding_writes_then_commits(tmp_path):
+    """close() without an explicit barrier still lands every queued spill
+    on disk, durable, with in-flight accounting back at zero."""
+    sched = WritebackIOScheduler(queue_depth=2)
+    rng = np.random.default_rng(0)
+    expect = {}
+    descs = []
+    for i in range(12):
+        ids = rng.choice(10_000, size=256, replace=False).astype(np.uint64)
+        rows = rng.standard_normal((256, 8)).astype(np.float32)
+        path = str(tmp_path / f"s{i:03d}.spill")
+        descs.append(sched.submit_spill(path, ids, rows, stats=None))
+        order = np.argsort(ids, kind="stable")
+        expect[path] = (ids[order], rows[order])
+    sched.close()
+    assert sched.qstats.bytes_inflight == 0 and sched.qstats.depth == 0
+    assert sched.qstats.completed == 12
+    assert sched.qstats.barriers >= 1 and sched.qstats.fsyncs > 0
+    for d in descs:
+        sf = SpillFile.open(d.path)  # validates header vs on-disk size
+        assert (sf.num_rows, sf.dim) == (d.num_rows, d.dim)
+        assert (sf.min_id, sf.max_id) == (d.min_id, d.max_id)
+        ids, rows = sf.read_all()
+        assert np.array_equal(ids, expect[d.path][0])
+        assert np.array_equal(rows, expect[d.path][1])
+
+
+def test_submitted_descriptor_matches_final_file(tmp_path):
+    """The descriptor returned at enqueue time (before any byte is
+    written) must agree with the file the I/O thread eventually writes —
+    including presorted hand-offs and arena-sliced batches."""
+    sched = WritebackIOScheduler()
+    ids = np.array([7, 3, 9, 1], dtype=np.uint64)
+    rows = np.arange(8, dtype=np.float32).reshape(4, 2)
+    d1 = sched.submit_spill(str(tmp_path / "a.spill"), ids.copy(), rows.copy())
+    arena_ids = np.zeros(16, dtype=np.uint64)
+    arena_rows = np.zeros((16, 2), dtype=np.float32)
+    arena_ids[:3] = [5, 2, 8]
+    arena_rows[:3] = 1.5
+    d2 = sched.submit_spill(
+        str(tmp_path / "b.spill"), arena_ids, arena_rows, num_rows=3,
+        recycle=True,
+    )
+    sorted_ids = np.array([10, 20, 30], dtype=np.uint64)
+    d3 = sched.submit_spill(
+        str(tmp_path / "c.spill"), sorted_ids, np.ones((3, 2), np.float32),
+        presorted=True,
+    )
+    sched.barrier()
+    for d in (d1, d2, d3):
+        sf = SpillFile.open(d.path)
+        assert (sf.num_rows, sf.min_id, sf.max_id) == (
+            d.num_rows, d.min_id, d.max_id,
+        )
+    assert (d1.min_id, d1.max_id) == (1, 9)
+    assert (d2.min_id, d2.max_id) == (2, 8)
+    assert (d3.min_id, d3.max_id) == (10, 30)
+    sched.close()
+
+
+def test_embedding_writer_through_scheduler_threaded(tmp_path):
+    """The full writer -> scheduler pipeline under the writer's own
+    offload thread: all rows land, arenas recycle, and the result equals
+    the synchronous writer's output."""
+    v, d = 3000, 6
+    rng = np.random.default_rng(4)
+    perm = rng.permutation(v).astype(np.uint64)
+    rows = rng.standard_normal((v, d)).astype(np.float32)
+    dense = {}
+    for mode in ("sync", "writeback"):
+        sched = make_scheduler(mode, queue_depth=3)
+        w = EmbeddingWriter(
+            str(tmp_path / mode), num_vertices=v, dim=d, dtype=np.float32,
+            num_partitions=4, buffer_rows=128, threaded=True, scheduler=sched,
+        )
+        for s in range(0, v, 177):
+            w.write(perm[s : s + 177], rows[s : s + 177])
+        spills = w.close()
+        if sched is not None:
+            sched.close()  # drains + group-commits
+            assert sched.qstats.bytes_inflight == 0
+            assert sched.qstats.depth_peak >= 1
+        out = np.full((v, d), np.nan, dtype=np.float32)
+        for f in spills.files:
+            fids, frows = f.read_all()
+            out[fids.astype(np.int64)] = frows
+        dense[mode] = out
+    assert np.array_equal(dense["sync"], dense["writeback"])
+
+
+def test_publish_crash_before_group_commit_rolls_back(tmp_path, monkeypatch):
+    """A publish that dies before its barrier must not land a version:
+    the manifest keeps the old current pointer and a retry republishes
+    cleanly (staging dir is rebuilt)."""
+    from tests.test_session import scattered_spillset, serving_session
+
+    v, d = 300, 4
+    rng = np.random.default_rng(13)
+    session = serving_session(tmp_path, v)
+    assert session.engine.config.io_impl == "writeback"
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    p1 = session.publish(1, spills=ss)
+
+    real_barrier = WritebackIOScheduler.barrier
+
+    def boom(self):
+        raise KeyboardInterrupt("die before group commit")
+
+    monkeypatch.setattr(WritebackIOScheduler, "barrier", boom)
+    with pytest.raises(KeyboardInterrupt):
+        session.publish(1, spills=ss)
+    monkeypatch.setattr(WritebackIOScheduler, "barrier", real_barrier)
+    assert session.store.current_servable_epoch(1) == p1.epoch
+    assert session.store.servable_versions(1) == [p1.epoch]
+    with session.reader(1) as r:
+        assert np.array_equal(r.lookup(np.arange(v)), spills_to_dense(ss, v, d))
+    p3 = session.publish(1, spills=ss)
+    assert p3.epoch > p1.epoch
+    session.close()
+
+
+def test_no_scheduler_threads_leak_after_sessions(tmp_path):
+    """Engine layers and session publishes both tear their I/O threads
+    down; repeated runs leave no atlas-io thread behind."""
+    v, d = 400, 6
+    csr = powerlaw_graph(v, 5, seed=41)
+    feats = make_features(v, d, seed=41)
+    specs = init_gnn_params("gcn", [d, 4], seed=1)
+    for i in range(2):
+        session, result = run_session(
+            tmp_path / f"r{i}", csr, feats, specs, "writeback"
+        )
+        session.publish(result.final)
+        session.close()
+    for _ in range(100):
+        if "atlas-io" not in {t.name for t in threading.enumerate()}:
+            break
+        threading.Event().wait(0.02)
+    assert "atlas-io" not in {t.name for t in threading.enumerate()}
+
+
+def test_make_scheduler_validates_impl():
+    assert make_scheduler("sync") is None
+    sched = make_scheduler("writeback")
+    assert isinstance(sched, WritebackIOScheduler)
+    sched.close()
+    with pytest.raises(ValueError, match="unknown io impl"):
+        make_scheduler("mmap")
+    with pytest.raises(ValueError, match="unknown durability"):
+        from repro.storage.spill import write_spill
+
+        write_spill(
+            "/tmp/never.spill",
+            np.zeros(0, np.uint64),
+            np.zeros((0, 1), np.float32),
+            durability="eventually",
+        )

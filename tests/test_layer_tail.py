@@ -349,32 +349,42 @@ def test_add_gather_matches_add():
 
 
 # --------------------------------------------------------- engine-level
-def test_engine_failed_layer_does_not_leak_tail_threads(tmp_path, monkeypatch):
-    """A spill failure mid-layer must propagate AND shut down both
-    offload threads plus the cold-store fd (no leak across retries)."""
+@pytest.mark.parametrize("io_impl", ["sync", "writeback"])
+def test_engine_failed_layer_does_not_leak_tail_threads(
+    tmp_path, monkeypatch, io_impl
+):
+    """A spill failure mid-layer must propagate AND shut down all three
+    offload threads plus the cold-store fd (no leak across retries).
+    Under io_impl='sync' the failure fires on the writer thread; under
+    'writeback' it fires on the I/O scheduler thread and must still
+    surface (sticky error -> submit/barrier) before run_layer returns."""
+    import repro.storage.io_scheduler as sched_mod
     import repro.storage.writer as writer_mod
 
     def boom(*a, **kw):
         raise SinkBoom("disk full")
 
     monkeypatch.setattr(writer_mod, "write_spill", boom)
+    monkeypatch.setattr(sched_mod, "write_spill", boom)
     V, D = 400, 8
     csr = powerlaw_graph(V, 5, seed=5)
     feats = make_features(V, D, seed=5)
     specs = init_gnn_params("gcn", [D, 4], seed=5)
     store = build_store(tmp_path, csr, feats)
     cfg = AtlasConfig(chunk_bytes=40 * D * 4, hot_slots=V,
-                      spill_buffer_rows=16, graduation_rows=16)
+                      spill_buffer_rows=16, graduation_rows=16,
+                      io_impl=io_impl)
     with pytest.raises(SinkBoom):
         AtlasEngine(cfg).run(store, specs, str(tmp_path / "work"))
     for _ in range(100):
         names = {t.name for t in threading.enumerate()}
-        if "atlas-graduate" not in names and "atlas-writer" not in names:
+        if names.isdisjoint({"atlas-graduate", "atlas-writer", "atlas-io"}):
             break
         threading.Event().wait(0.05)
     names = {t.name for t in threading.enumerate()}
     assert "atlas-graduate" not in names
     assert "atlas-writer" not in names
+    assert "atlas-io" not in names
 
 
 def test_engine_tail_impls_bit_identical(tmp_path):

@@ -372,6 +372,71 @@ def test_query_engine_cache_transparency_and_warm_path(tmp_path):
     assert cache.hits > 0
 
 
+@pytest.mark.parametrize("cache_bytes", [0, 1 << 20])
+def test_coalesced_gather_bit_identical_to_per_block_path(tmp_path, cache_bytes):
+    """The contiguous-span fast path (one pread + one gather per run of
+    adjacent missed blocks) must return exactly what the per-block oracle
+    path returns, under every batch shape and cache state."""
+    rng = np.random.default_rng(7)
+    v, d = 4000, 6
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=5)
+    ref = spills_to_dense(ss, v, d)
+    paths = compact_spills(ss, str(tmp_path / "o"), rows_per_file=700, block_rows=32)
+    engines = {}
+    for co in (True, False):
+        layer = ServableLayer.open(paths, block_rows=32)
+        cache = (
+            ShardedPageCache(layer.num_blocks, cache_bytes, num_shards=2)
+            if cache_bytes
+            else None
+        )
+        engines[co] = VertexQueryEngine(layer, cache=cache, coalesce=co)
+    batches = [
+        np.arange(v, dtype=np.uint64),  # full scan: maximal contiguity
+        np.arange(900, 2500, dtype=np.uint64),  # range scan
+        rng.integers(0, v, size=800).astype(np.uint64),  # random + dups
+        np.array([17], dtype=np.uint64),  # point
+        np.array([0, v - 1], dtype=np.uint64),  # span-breaking extremes
+    ]
+    for q in batches:
+        fast, oracle = engines[True].lookup(q), engines[False].lookup(q)
+        assert np.array_equal(fast, oracle)
+        assert np.array_equal(fast, ref[q.astype(np.int64)])
+        # warm repeat (cache hits scatter per block) stays identical
+        assert np.array_equal(engines[True].lookup(q), fast)
+        assert np.array_equal(engines[False].lookup(q), fast)
+    # both paths fetched the same blocks; the fast path did so in fewer
+    # preads and actually coalesced multi-block runs
+    assert engines[True].blocks_read == engines[False].blocks_read
+    assert engines[True].span_reads < engines[True].blocks_read
+    assert engines[True].coalesced_blocks > 0
+    assert engines[False].span_reads == 0
+
+
+def test_coalesced_spans_never_cross_files_or_holes(tmp_path):
+    """Span detection must break at file boundaries and at cached blocks
+    sitting between two misses (non-consecutive keys)."""
+    rng = np.random.default_rng(8)
+    v, d = 1200, 4
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=4)
+    ref = spills_to_dense(ss, v, d)
+    # tiny files -> many file boundaries inside one big batch
+    paths = compact_spills(ss, str(tmp_path / "o"), rows_per_file=150, block_rows=16)
+    layer = ServableLayer.open(paths, block_rows=16)
+    cache = ShardedPageCache(layer.num_blocks, 8 << 20, num_shards=2)
+    eng = VertexQueryEngine(layer, cache=cache)
+    # pre-warm every third block by point lookups: holes between misses
+    for vid in range(0, v, 3 * 16):
+        eng.lookup(np.array([vid], dtype=np.uint64))
+    q = np.arange(v, dtype=np.uint64)
+    assert np.array_equal(eng.lookup(q), ref)
+    assert len(layer.files) > 1
+    # a full re-scan is now all cache hits and still bit-identical
+    before = eng.blocks_read
+    assert np.array_equal(eng.lookup(q), ref)
+    assert eng.blocks_read == before
+
+
 def _check_bit_identical(tmp_path_factory, n, dim, n_files, block_rows, sparse):
     tmp = tmp_path_factory.mktemp("serve_prop")
     rng = np.random.default_rng(n * 131 + dim * 7 + n_files)

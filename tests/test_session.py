@@ -323,6 +323,73 @@ def test_publish_gc_drops_unpinned_keeps_pinned(tmp_path):
     session.close()
 
 
+def test_publish_retain_keeps_newest_unpinned_history(tmp_path):
+    """publish(retain=N) keeps at most N unpinned historical versions —
+    the newest ones — and still never touches pinned or current ones."""
+    v, d = 300, 4
+    rng = np.random.default_rng(9)
+    session = serving_session(tmp_path, v)
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    pubs = [session.publish(1, spills=ss, retain=2) for _ in range(5)]
+    # current epoch 5 + the two newest historical (3, 4); 1 and 2 GC'd
+    # one at a time as the history window slid past them
+    assert session.store.servable_versions(1) == [3, 4, 5]
+    assert pubs[3].gc_removed == (1,)
+    assert pubs[-1].gc_removed == (2,)
+    for p in pubs[:2]:
+        assert not os.path.exists(p.dir)
+    for p in pubs[2:]:
+        assert os.path.isdir(p.dir)
+    # historical (non-current) retained versions stay openable
+    with session.reader(1, epoch=3) as r:
+        assert np.array_equal(r.lookup(np.arange(v)), spills_to_dense(ss, v, d))
+    # shrinking retain on the next publish collects the surplus
+    session.publish(1, spills=ss, retain=1)
+    assert session.store.servable_versions(1) == [5, 6]
+    session.close()
+    assert session.store.servable_versions(1) == [6]
+
+
+def test_publish_retain_pinned_versions_do_not_count(tmp_path):
+    """A version pinned by an open reader survives regardless of retain
+    and does not consume the retain budget."""
+    v, d = 250, 4
+    rng = np.random.default_rng(10)
+    session = serving_session(tmp_path, v)
+    ss, rows = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    p1 = session.publish(1, spills=ss, retain=1)
+    r1 = session.reader(1)  # pins epoch 1
+    for _ in range(3):
+        session.publish(1, spills=ss, retain=1)
+    # epoch 1: pinned.  epoch 3: the one retained unpinned historical.
+    # epoch 4: current.  epoch 2 was collected despite retain=1 because
+    # pinned epoch 1 does not consume the budget.
+    assert session.store.servable_versions(1) == [1, 3, 4]
+    assert np.array_equal(r1.lookup(np.arange(v)), spills_to_dense(ss, v, d))
+    r1.close()
+    # with the pin gone, epoch 1 is plain history: newest-first retention
+    # keeps epoch 3 and collects it
+    session.publish(1, spills=ss, retain=1)
+    assert session.store.servable_versions(1) == [4, 5]
+    assert not os.path.exists(p1.dir)
+    session.close()
+
+
+def test_gc_retain_without_publish(tmp_path):
+    """session.gc(layer, retain=N) applies the same policy on demand."""
+    v, d = 200, 4
+    rng = np.random.default_rng(11)
+    session = serving_session(tmp_path, v)
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    for _ in range(4):
+        session.publish(1, spills=ss, retain=10)  # keep everything
+    assert session.store.servable_versions(1) == [1, 2, 3, 4]
+    removed = session.gc(1, retain=1)
+    assert sorted(removed) == [1, 2]
+    assert session.store.servable_versions(1) == [3, 4]
+    session.close()
+
+
 def test_publish_sweeps_orphan_version_dirs(tmp_path):
     """A crash between un-recording a version and deleting its files
     leaves an orphan v<epoch>/ dir; the next publish reclaims it (epochs
