@@ -143,12 +143,14 @@ def run_engine(
     seed: int,
     backend: str = "numpy",
     io_impl: str = "writeback",
+    pipeline: str = "auto",
 ):
     """Full run_layer on a real on-disk store.  ``impl`` selects BOTH the
     eviction-policy impl and the layer-tail impl (python = full scalar
     oracle baseline, array = the vectorized engine); ``io_impl`` selects
     the spill durability path (sync fsync-per-spill oracle vs async
-    write-back + group commit)."""
+    write-back + group commit); ``pipeline`` selects serial vs the
+    double-buffered staging ring for device aggregation."""
     d = feats.shape[1]
     specs = init_gnn_params("gcn", [d, 8], seed=seed)
     cfg = AtlasConfig(
@@ -159,6 +161,7 @@ def run_engine(
         tail_impl=impl,
         backend=backend,
         io_impl=io_impl,
+        pipeline=pipeline,
         seed=seed,
     )
     with tempfile.TemporaryDirectory() as td:
@@ -187,6 +190,9 @@ def run_engine(
         "spill_seconds": m.spill_seconds,
         "barrier_seconds": m.barrier_seconds,
         "bytes_inflight": m.bytes_inflight,
+        "aggregate_seconds": m.aggregate_seconds,
+        "h2d_seconds": m.h2d_seconds,
+        "pipeline_stall_seconds": m.pipeline_stall_seconds,
         "output": out,
     }
 
@@ -381,8 +387,14 @@ def main():
     ap.add_argument("--mode",
                     choices=["micro", "engine", "both", "backend", "io"],
                     default="micro")
-    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"],
-                    help="chunk-aggregation backend for --mode engine runs")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax", "pallas", "pallas-interpret"],
+                    help="chunk-aggregation backend for --mode engine and "
+                         "the non-numpy leg of --mode backend")
+    ap.add_argument("--pipeline", default="auto",
+                    choices=["auto", "staged", "serial"],
+                    help="aggregation pipeline for --mode engine runs "
+                         "(auto = staged when threaded and backend != numpy)")
     ap.add_argument("--io-impl", default="writeback",
                     choices=["writeback", "sync"],
                     help="spill durability impl for --mode engine runs")
@@ -423,7 +435,7 @@ def main():
             impl: best([
                 run_engine(csr, feats, impl, hot_slots, args.chunk_vertices,
                            args.seed, backend=args.backend,
-                           io_impl=args.io_impl)
+                           io_impl=args.io_impl, pipeline=args.pipeline)
                 for _ in range(reps)
             ])
             for impl in ("python", "array")
@@ -434,6 +446,29 @@ def main():
             raise AssertionError("impls diverged (spill contents)")
         speedup = report("engine (full run_layer)", res)
         print("  spill contents: bit-identical across impls")
+        ar = res["array"]
+        print(
+            f"  pipeline: aggregate {ar['aggregate_seconds']:.4f}s   "
+            f"h2d {ar['h2d_seconds']:.4f}s   "
+            f"stall {ar['pipeline_stall_seconds']:.4f}s"
+        )
+        # the staging ring must reproduce the serial spills bit for bit
+        if args.backend != "numpy":
+            out_st = run_engine(
+                csr, feats, "array", hot_slots, args.chunk_vertices,
+                args.seed, backend=args.backend, io_impl=args.io_impl,
+                pipeline="staged",
+            ).pop("output")
+            out_se = run_engine(
+                csr, feats, "array", hot_slots, args.chunk_vertices,
+                args.seed, backend=args.backend, io_impl=args.io_impl,
+                pipeline="serial",
+            ).pop("output")
+            if not np.array_equal(out_st, out_se):
+                raise AssertionError(
+                    "pipeline impls diverged (spill contents)"
+                )
+            print("  spill contents: bit-identical staged vs serial pipeline")
         # layer-tail throughput: replay the engine's real graduation
         # stream through both tail impls, single-threaded and isolated
         batches = capture_graduation_stream(
@@ -464,32 +499,38 @@ def main():
         print("  spill contents: bit-identical across io impls")
         all_results["io"] = sweep
     if args.mode == "backend":
-        # ROADMAP item: numpy vs jax chunk aggregation end-to-end, with the
-        # array policy impl fixed so only the aggregation backend varies
+        # ROADMAP item: numpy vs device chunk aggregation end-to-end, with
+        # the array policy impl fixed so only the aggregation backend varies
         feats = build_features(args, feat_td.name)
+        other = args.backend if args.backend != "numpy" else "jax"
         res = {
             backend: best([
                 run_engine(csr, feats, "array", hot_slots, args.chunk_vertices,
                            args.seed, backend=backend)
                 for _ in range(reps)
             ])
-            for backend in ("numpy", "jax")
+            for backend in ("numpy", other)
         }
-        ny, jx = res["numpy"], res["jax"]
+        ny, dv = res["numpy"], res[other]
         # backends differ in float op order: same bookkeeping, not bitwise
-        ny.pop("output"), jx.pop("output")
-        assert ny["evictions"] == jx["evictions"], "backends diverged (evictions)"
-        speedup = ny["seconds"] / jx["seconds"]
+        ny.pop("output"), dv.pop("output")
+        assert ny["evictions"] == dv["evictions"], "backends diverged (evictions)"
+        speedup = ny["seconds"] / dv["seconds"]
         print("\n== backend (full run_layer, policy_impl=array) ==")
-        for r in (ny, jx):
+        for r in (ny, dv):
             print(
-                f"  {r['backend']:<7} {r['seconds']:8.3f}s   "
+                f"  {r['backend']:<16} {r['seconds']:8.3f}s   "
                 f"{r['chunks_per_s']:10.1f} chunks/s   "
                 f"{r['vertices_per_s']:12.0f} vertices/s   "
                 f"evictions={r['evictions']} reloads={r['reloads']}"
             )
-        print(f"  speedup (jax over numpy): {speedup:.2f}x")
-        all_results["backend"] = {**res, "jax_speedup": speedup}
+        print(
+            f"  device leg: aggregate {dv['aggregate_seconds']:.4f}s   "
+            f"h2d {dv['h2d_seconds']:.4f}s   "
+            f"stall {dv['pipeline_stall_seconds']:.4f}s"
+        )
+        print(f"  speedup ({other} over numpy): {speedup:.2f}x")
+        all_results["backend"] = {**res, f"{other}_speedup": speedup}
     feat_td.cleanup()
     if args.json == "-":
         print(json.dumps(all_results, indent=2))

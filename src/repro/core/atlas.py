@@ -1,16 +1,17 @@
 """The ATLAS engine: broadcast-based, layer-wise, out-of-core GNN inference
 (paper §3).
 
-Pipeline per layer (Fig 3):
+Pipeline per layer (Fig 3, plus the §4 device pipeline):
 
-    reader thread ──chunks──▶ orchestrator/memory-manager (this thread)
-        │ sequential, single-pass                 │ graduated buffers
-        ▼                                         ▼
-    sorted spill files  ◀──writer thread── graduation offload thread
-    of layer l-1              │                (dense transform)
-                              ▼ arena hand-off (io_impl='writeback')
-                        write-back I/O thread: sort + serialize,
-                        group-commit fsync at the layer barrier
+    reader thread ──chunks──▶ staging ring ──(k+1 aggregates while k
+        │ sequential, single-pass   │          delivers)──▶ this thread
+        ▼                           ▼ h2d + aggregate        │ graduated
+    sorted spill files       (numpy / jax / pallas)          ▼ buffers
+    of layer l-1   ◀──writer thread◀── graduation offload thread
+                         │                (dense transform)
+                         ▼ arena hand-off (io_impl='writeback')
+                   write-back I/O thread: sort + serialize,
+                   group-commit fsync at the layer barrier
 
 Fault tolerance: a layer is a transaction.  The run manifest records
 completed layers and their spill files; a crash mid-layer discards that
@@ -18,9 +19,13 @@ layer's partial spills on resume and replays it from the (immutable)
 previous layer.  Under the write-back scheduler the layer's spills
 become durable at one group-commit barrier at the end of ``run_layer``
 — still strictly before the manifest advances, so the crash windows are
-unchanged.  The run loop itself lives in
-``repro.session.AtlasSession.infer`` (``AtlasEngine.run`` is a
-deprecation shim over it); see
+unchanged.  When the session shares one scheduler across the run it
+passes it in via ``run_layer(scheduler=...)``; the barrier then runs on
+a helper thread, overlapped with the next layer's first chunk reads, and
+the caller sequences *barrier-wait → manifest advance* through the
+returned wait closure — same crash windows, no inter-layer stall.  The
+run loop itself lives in ``repro.session.AtlasSession.infer``
+(``AtlasEngine.run`` is a deprecation shim over it); see
 tests/test_atlas_engine.py::test_resume_after_simulated_crash.
 """
 
@@ -28,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 import warnings
 
@@ -38,6 +44,7 @@ from repro.core.eviction import make_policy
 from repro.core.graduation import GraduationProcessor, make_graduation
 from repro.core.memory_manager import MemoryManager
 from repro.core.orchestrator import Orchestrator
+from repro.core.staging import make_aggregation_pipeline
 from repro.models.gnn import (
     GNNLayerSpec,
     edge_weights,
@@ -63,7 +70,13 @@ class AtlasConfig:
     spill_buffer_rows: int = 8192
     graduation_rows: int = 8192
     queue_depth: int = 20
-    backend: str = "numpy"  # 'numpy' | 'jax' chunk aggregation
+    backend: str = "numpy"  # chunk aggregation: 'numpy' | 'jax' |
+    # 'pallas' (edge_block_spmm kernel; interpret mode off-TPU) |
+    # 'pallas-interpret' (force interpret even on TPU)
+    pipeline: str = "auto"  # chunk staging: 'auto' (staged for device
+    # backends when threaded) | 'staged' (ring, aggregate overlaps
+    # delivery) | 'serial' (aggregate inline on the delivery thread)
+    staging_depth: int = 2  # staging ring depth (chunks in flight)
     policy_impl: str = "array"  # 'array' (vectorized) | 'python' (scalar oracle)
     tail_impl: str = "array"  # layer tail (graduation buffers + spill
     # scatter): 'array' (ring buffers / argsort runs) | 'python' (oracle)
@@ -105,9 +118,50 @@ class LayerMetrics:
     # write-back group commit (io_impl='writeback'; zero under 'sync'):
     barrier_seconds: float = 0.0  # the one durability wait per layer
     bytes_inflight: int = 0  # scheduler queue highwater (bytes)
+    # device pipeline split (ISSUE 6): how much of the transfer the
+    # staging ring actually hides
+    aggregate_seconds: float = 0.0  # time inside aggregate() calls
+    h2d_seconds: float = 0.0  # host->device staging (jax/pallas backends)
+    pipeline_stall_seconds: float = 0.0  # delivery thread waits on the ring
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class _DeferredBarrier:
+    """Layer-end group commit on a helper thread (ISSUE 6): the queue
+    drain + fsync pass overlap the next layer's first chunk reads
+    instead of serializing between layers.  ``wait`` joins, re-raises
+    any barrier error, and fills the layer's metrics — callers sequence
+    it strictly *before* the manifest advance, so the crash-consistency
+    ordering (data durable -> manifest pointer) is unchanged."""
+
+    def __init__(self, scheduler):
+        self._scheduler = scheduler
+        self._seconds = 0.0
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(
+            target=self._run, name="atlas-barrier", daemon=True
+        )
+        self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            self._seconds = self._scheduler.barrier()
+        except BaseException as e:  # noqa: BLE001 — re-raised in wait()
+            self._error = e
+
+    def wait(self, m: "LayerMetrics") -> None:
+        self._thread.join()
+        if self._error is not None:
+            raise self._error
+        m.barrier_seconds = self._seconds
+        m.bytes_inflight = self._scheduler.qstats.bytes_inflight_peak
+
+
+# sentinel: distinguishes "make a per-layer scheduler" (legacy/default)
+# from an explicitly passed shared scheduler, which may be None (sync)
+_OWN_SCHEDULER = object()
 
 
 class AtlasEngine:
@@ -142,7 +196,12 @@ class AtlasEngine:
         from repro.session import AtlasSession
 
         session = AtlasSession(store, workdir=workdir, engine=self)
-        result = session.infer(specs, resume=resume)
+        try:
+            result = session.infer(specs, resume=resume)
+        finally:
+            # the session owns the shared write-back scheduler now; a
+            # throwaway shim session must not leak its I/O thread
+            session.close()
         return result.final.spills, result.metrics
 
     # --------------------------------------------------------------- layer
@@ -154,7 +213,22 @@ class AtlasEngine:
         spec: GNNLayerSpec,
         out_dir: str,
         layer_index: int = 0,
-    ) -> tuple[SpillSet, LayerMetrics]:
+        scheduler=_OWN_SCHEDULER,
+        pending_commit=None,
+    ):
+        """Run one layer.  Default call: makes (and tears down) its own
+        write-back scheduler, barriers inline, returns
+        ``(SpillSet, LayerMetrics)``.
+
+        Session mode: pass ``scheduler=`` explicitly (the run-shared
+        scheduler, or ``None`` under ``io_impl='sync'``) and the return
+        becomes ``(SpillSet, LayerMetrics, barrier_wait)`` — the group
+        commit runs on a helper thread and ``barrier_wait()`` joins it
+        (re-raising errors, filling the barrier metrics); the caller
+        must invoke it before recording the layer in the run manifest.
+        ``pending_commit`` is the previous layer's commit closure: it is
+        called once, after this layer's pipeline has started, so the
+        previous barrier overlaps this layer's first chunk reads."""
         cfg = self.config
         t0 = time.perf_counter()
         num_vertices = csr.num_vertices
@@ -205,9 +279,26 @@ class AtlasEngine:
         # write-back scheduler: spill flushes become enqueue-and-continue;
         # durability collapses into one group-commit barrier at layer end
         # (before the caller's manifest advance).  io_impl='sync' keeps
-        # the fsync-per-spill path as the bit-identical oracle.
-        scheduler = make_scheduler(cfg.io_impl, queue_depth=cfg.io_queue_depth)
+        # the fsync-per-spill path as the bit-identical oracle.  The
+        # session passes one run-shared scheduler in; this method never
+        # closes a shared one.
+        own_scheduler = scheduler is _OWN_SCHEDULER
+        if own_scheduler:
+            scheduler = make_scheduler(
+                cfg.io_impl, queue_depth=cfg.io_queue_depth
+            )
+
+        def prep(chunk):
+            # per-chunk edge prep — runs on the staging thread when the
+            # ring pipeline is active (read-only on in_deg/spec)
+            src_g = chunk.edge_src.astype(np.int64)
+            dst = chunk.edge_dst.astype(np.int64)
+            w = edge_weights(spec.kind, src_g, dst, in_deg)
+            src_local = (src_g - chunk.start_id).astype(np.int64)
+            return src_local, dst, w
+
         writer = None
+        it = None
         try:
             writer = EmbeddingWriter(
                 out_dir,
@@ -233,14 +324,25 @@ class AtlasEngine:
                 threaded=cfg.threaded,
             )
             aggregate = chunk_aggregate(cfg.backend)
+            it = iter(reader) if cfg.threaded else reader.read_serial()
+            # staging ring (§4 device pipeline): chunk k+1 preps, stages
+            # h2d, and aggregates on a dedicated thread while chunk k is
+            # delivered below — FIFO, so delivery order stays the serial
+            # index order bit-for-bit
+            pipe = make_aggregation_pipeline(
+                cfg.pipeline, cfg.backend, cfg.threaded, it, prep,
+                aggregate, depth=cfg.staging_depth,
+            )
         except BaseException:
-            # a failed constructor (bad tail_impl/backend) must not leak
-            # the already-spawned offload/io threads or the cold-store fd
-            # across retries in a long-lived process
+            # a failed constructor (bad tail_impl/backend/pipeline) must
+            # not leak the already-spawned offload/io threads or the
+            # cold-store fd across retries in a long-lived process
             cleanups = [cold.close]
             if writer is not None:
                 cleanups.append(writer.close)
-            if scheduler is not None:
+            if it is not None:
+                cleanups.append(it.close)
+            if scheduler is not None and own_scheduler:
                 cleanups.append(
                     lambda: scheduler.close(commit=False, raise_error=False)
                 )
@@ -258,15 +360,10 @@ class AtlasEngine:
         # reusable eviction shield: one bool per vertex, set/cleared per
         # chunk in O(#destinations) — replaces the per-chunk Python set
         shield = np.zeros(num_vertices, dtype=bool)
-        it = iter(reader) if cfg.threaded else reader.read_serial()
+        commit_done = pending_commit is None
         try:
-            for chunk in it:
+            for chunk, (u_dst, partial, counts) in pipe:
                 chunks += 1
-                src_g = chunk.edge_src.astype(np.int64)
-                dst = chunk.edge_dst.astype(np.int64)
-                w = edge_weights(spec.kind, src_g, dst, in_deg)
-                src_local = (src_g - chunk.start_id).astype(np.int64)
-                u_dst, partial, counts = aggregate(chunk.feats, src_local, dst, w)
 
                 # shield everything receiving messages in this chunk
                 shield[u_dst] = True
@@ -297,6 +394,18 @@ class AtlasEngine:
                 if spec.extra_self_message:
                     shield[chunk.start_id : chunk.end_id] = False
 
+                if not commit_done:
+                    # overlap point: the previous layer's barrier has been
+                    # draining on its helper thread while this layer's
+                    # first chunk was read, staged, and delivered — join
+                    # it and let the caller advance the manifest now
+                    commit_done = True
+                    pending_commit()
+
+            if not commit_done:
+                commit_done = True
+                pending_commit()
+
             try:
                 grad.close()
             finally:
@@ -323,20 +432,33 @@ class AtlasEngine:
             # resume replays the layer from the previous (durable) one.
             barrier_seconds = 0.0
             bytes_inflight = 0
+            barrier_handle = None
             if scheduler is not None:
-                barrier_seconds = scheduler.barrier()
-                bytes_inflight = scheduler.qstats.bytes_inflight_peak
-                # the explicit barrier above already committed everything;
-                # close() only reclaims the I/O thread
-                scheduler.close(commit=False)
+                if own_scheduler:
+                    barrier_seconds = scheduler.barrier()
+                    bytes_inflight = scheduler.qstats.bytes_inflight_peak
+                    # the explicit barrier above already committed
+                    # everything; close() only reclaims the I/O thread
+                    scheduler.close(commit=False)
+                else:
+                    # shared scheduler: the queue must drain *before*
+                    # this layer's spill set is handed to the caller —
+                    # the next layer streams these files, so they have
+                    # to exist (and write errors must surface here, not
+                    # after the manifest).  Only the fsync group commit
+                    # is deferred to the helper thread, overlapped with
+                    # the next layer's first chunk reads.
+                    scheduler.drain()
+                    barrier_handle = _DeferredBarrier(scheduler)
         except BaseException:
             # a failed layer is discarded and replayed (layer = transaction),
             # but a long-lived process must not leak the offload threads or
             # the cold-store fd across failed attempts: best-effort shutdown
             # without masking the original error (close() is idempotent;
-            # the scheduler skips its commit — the partial output is dead)
+            # the scheduler skips its commit — the partial output is dead).
+            # A shared scheduler belongs to the session: never close it here.
             cleanups = [grad.close, writer.close, cold.close]
-            if scheduler is not None:
+            if scheduler is not None and own_scheduler:
                 cleanups.append(
                     lambda: scheduler.close(commit=False, raise_error=False)
                 )
@@ -347,8 +469,8 @@ class AtlasEngine:
                     pass
             raise
         finally:
-            # unblock the reader thread if we bail out mid-layer
-            it.close()
+            # unblock the staging + reader threads if we bail out mid-layer
+            pipe.close()
 
         cold.close()
 
@@ -377,7 +499,16 @@ class AtlasEngine:
             tail_rows_per_s=grad.graduated / tail_seconds if tail_seconds else 0.0,
             barrier_seconds=barrier_seconds,
             bytes_inflight=bytes_inflight,
+            aggregate_seconds=pipe.aggregate_seconds,
+            h2d_seconds=getattr(aggregate, "h2d_seconds", 0.0),
+            pipeline_stall_seconds=pipe.stall_seconds,
         )
+        if not own_scheduler:
+            if barrier_handle is not None:
+                barrier_wait = lambda: barrier_handle.wait(m)  # noqa: E731
+            else:
+                barrier_wait = lambda: None  # noqa: E731 — io_impl='sync'
+            return layer_spills, m, barrier_wait
         return layer_spills, m
 
     # -------------------------------------------------------------- deliver

@@ -4,22 +4,41 @@ For one streamed chunk of source vertices, construct all outgoing messages
 (m_{u->v} = w(u,v) * h_u) and pre-aggregate them *by destination* so the
 memory manager touches each destination slot exactly once per chunk.
 
-Two interchangeable backends:
+Three interchangeable backends, selected by ``AtlasConfig.backend``:
+
   * numpy  — sort-by-destination + ``np.add.reduceat`` (host fallback;
              default on this CPU-only container),
   * jax    — gather/scale/``segment_sum`` jit; the semantics twin of the
-             ``edge_block_spmm`` Pallas TPU kernel (kernels/), which is the
-             deployment hot path on TPU (one-hot MXU formulation).
+             Pallas kernel and the reference it is atol-tested against,
+  * pallas — the ``edge_block_spmm`` one-hot MXU kernel (kernels/), the
+             deployment hot path on TPU.  On hosts without a TPU it
+             degrades to ``interpret=True`` so the same kernel code runs
+             (slowly) everywhere; ``pallas-interpret`` forces that mode.
+
+All backends share one contract::
+
+    (unique_dst int64 [s], partial float32 [s, d], counts int64 [s])
+
+with ``unique_dst`` sorted ascending — callers (``_deliver``) rely on one
+row per distinct destination.  The jax/pallas backends are *objects* (not
+bare functions) so they can carry reusable host scratch between chunks
+and account ``h2d_seconds`` separately from kernel time.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.edge_block_spmm import (
+    auto_blocks,
+    edge_block_spmm_padded,
+)
 
 
 def chunk_aggregate_numpy(
@@ -96,9 +115,200 @@ def chunk_aggregate_jax(
     )
 
 
+class JaxChunkAggregator:
+    """``chunk_aggregate_jax`` semantics with h2d transfer attribution.
+
+    Same outputs as the bare function (shares ``_segment_messages``); the
+    device_put of the four operands is timed into ``h2d_seconds`` so the
+    pipeline can report how much transfer it hides.
+    """
+
+    backend = "jax"
+
+    def __init__(self) -> None:
+        self.h2d_seconds = 0.0
+
+    def __call__(self, feats, src_local, dst, weights):
+        if len(dst) == 0:
+            return (
+                np.empty(0, dtype=np.int64),
+                np.empty((0, feats.shape[1]), dtype=np.float32),
+                np.empty(0, dtype=np.int64),
+            )
+        unique_dst, seg_ids, counts = np.unique(
+            dst, return_inverse=True, return_counts=True
+        )
+        m = len(dst)
+        pad = 1 << (m - 1).bit_length()
+        n_seg = len(unique_dst)
+        src_p = np.zeros(pad, dtype=np.int32)
+        src_p[:m] = src_local
+        seg_p = np.full(pad, n_seg, dtype=np.int32)
+        seg_p[:m] = seg_ids
+        w_p = np.zeros(pad, dtype=np.float32)
+        w_p[:m] = weights
+        t0 = time.monotonic()
+        feats_d = jax.device_put(np.ascontiguousarray(feats, np.float32))
+        src_d = jax.device_put(src_p)
+        seg_d = jax.device_put(seg_p)
+        w_d = jax.device_put(w_p)
+        jax.block_until_ready((feats_d, src_d, seg_d, w_d))
+        self.h2d_seconds += time.monotonic() - t0
+        out = _segment_messages(
+            feats_d, src_d, seg_d, w_d, num_segments=n_seg + 1
+        )
+        return (
+            unique_dst.astype(np.int64),
+            np.asarray(out[:n_seg]),
+            counts.astype(np.int64),
+        )
+
+
+def _pow2_tiles(n: int, block: int) -> int:
+    """Round ``n`` up to ``block * 2**k`` tiles — the static-shape buckets
+    that bound jit recompiles when edge/segment counts drift per chunk."""
+    tiles = -(-max(n, 1) // block)
+    return block * (1 << (tiles - 1).bit_length())
+
+
+class PallasChunkAggregator:
+    """Pallas ``edge_block_spmm`` as a chunk_aggregate backend.
+
+    Host side mirrors the jax backend: ``np.unique`` builds the chunk's
+    destination dictionary, so the kernel runs over *dense* segment ids
+    (``num_dst = n_seg``) instead of global vertex ids — the out tile
+    count tracks the chunk's fan-out, not |V|.
+
+    Chunk-to-chunk reuse: operand padding happens in host scratch buffers
+    keyed by padded shape (allocated once per bucket, refilled per call;
+    pad margins carry the kernel's ``-1`` sentinel / zero weight), and
+    padded shapes are pow-2-bucketed so jit traces a handful of shapes
+    per layer rather than one per chunk.
+
+    ``interpret="auto"`` resolves from ``jax.default_backend()`` — the
+    compiled kernel on TPU, interpret mode elsewhere (CI still exercises
+    the real kernel body).  Block sizes default to ``auto_blocks`` from
+    the first non-empty chunk's shape and stay frozen for scratch
+    stability; explicit ``block_*`` kwargs override.
+    """
+
+    backend = "pallas"
+
+    def __init__(
+        self,
+        interpret: bool | str = "auto",
+        block_e: int | None = None,
+        block_v: int | None = None,
+        block_dst: int | None = None,
+        block_d: int | None = None,
+    ) -> None:
+        if interpret == "auto":
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+        self._blocks = (
+            (block_e, block_v, block_dst, block_d)
+            if all((block_e, block_v, block_dst, block_d))
+            else None
+        )
+        self.h2d_seconds = 0.0
+        self._feat_scratch: dict[tuple[int, int], np.ndarray] = {}
+        self._edge_scratch: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+
+    def _edges(self, ep: int, m: int, src_local, seg_ids, weights):
+        buf = self._edge_scratch.get(ep)
+        if buf is None:
+            buf = (
+                np.full((ep, 1), -1, np.int32),
+                np.full((ep, 1), -1, np.int32),
+                np.zeros((ep, 1), np.float32),
+            )
+            self._edge_scratch[ep] = buf
+        src_p, dst_p, w_p = buf
+        src_p[:m, 0] = src_local
+        src_p[m:, 0] = -1
+        dst_p[:m, 0] = seg_ids
+        dst_p[m:, 0] = -1
+        w_p[:m, 0] = weights
+        w_p[m:, 0] = 0.0
+        return src_p, dst_p, w_p
+
+    def _feats(self, vp: int, dp: int, feats: np.ndarray) -> np.ndarray:
+        n, d = feats.shape
+        if (vp, dp) == (n, d):
+            return np.ascontiguousarray(feats, np.float32)
+        buf = self._feat_scratch.get((vp, dp))
+        if buf is None:
+            buf = np.zeros((vp, dp), np.float32)
+            self._feat_scratch[(vp, dp)] = buf
+        # stale rows beyond n are never selected (src_local < n, and a
+        # one-hot zero times any finite stale value is exactly 0)
+        buf[:n, :d] = feats
+        return buf
+
+    def __call__(self, feats, src_local, dst, weights):
+        if len(dst) == 0:
+            return (
+                np.empty(0, dtype=np.int64),
+                np.empty((0, feats.shape[1]), dtype=np.float32),
+                np.empty(0, dtype=np.int64),
+            )
+        unique_dst, seg_ids, counts = np.unique(
+            dst, return_inverse=True, return_counts=True
+        )
+        n, d = feats.shape
+        m = len(dst)
+        n_seg = len(unique_dst)
+        if self._blocks is None:
+            self._blocks = auto_blocks(n, d, m, n_seg, self.interpret)
+        be, bv, bdst, bd = self._blocks
+
+        ep = _pow2_tiles(m, be)
+        vp = -(-n // bv) * bv
+        dp = -(-d // bd) * bd
+        jp = _pow2_tiles(n_seg, bdst)
+
+        src_p, dst_p, w_p = self._edges(
+            ep, m, src_local, np.asarray(seg_ids, np.int32), weights
+        )
+        feats_p = self._feats(vp, dp, feats)
+
+        t0 = time.monotonic()
+        operands = (
+            jax.device_put(src_p),
+            jax.device_put(dst_p),
+            jax.device_put(w_p),
+            jax.device_put(feats_p),
+        )
+        jax.block_until_ready(operands)
+        self.h2d_seconds += time.monotonic() - t0
+
+        out = edge_block_spmm_padded(
+            *operands,
+            block_e=be, block_v=bv, block_dst=bdst, block_d=bd,
+            num_dst_padded=jp, interpret=self.interpret,
+            donate=not self.interpret,
+        )
+        return (
+            unique_dst.astype(np.int64),
+            np.asarray(out[:n_seg, :d]),
+            counts.astype(np.int64),
+        )
+
+
 def chunk_aggregate(backend: str = "numpy"):
+    """Resolve a backend name to a callable with the shared contract.
+
+    ``numpy``/``jax`` are stateless-per-layer; ``pallas`` returns a fresh
+    aggregator object (call once per layer — it carries scratch buffers).
+    ``pallas-interpret`` forces interpret mode even on a TPU host, which
+    is what CI and the equivalence tests use.
+    """
     if backend == "numpy":
         return chunk_aggregate_numpy
     if backend == "jax":
-        return chunk_aggregate_jax
+        return JaxChunkAggregator()
+    if backend == "pallas":
+        return PallasChunkAggregator(interpret="auto")
+    if backend == "pallas-interpret":
+        return PallasChunkAggregator(interpret=True)
     raise ValueError(f"unknown broadcast backend {backend!r}")

@@ -293,10 +293,12 @@ class AtlasSession:
         self._io_sched = None  # lazy write-back scheduler for publishes
 
     def _publish_scheduler(self):
-        """The session's write-back scheduler for publish/compaction
-        (None when the engine config runs ``io_impl='sync'``).  Created
-        lazily and only used under ``_publish_lock``; ``close`` tears it
-        down."""
+        """The session's run-shared write-back scheduler (None when the
+        engine config runs ``io_impl='sync'``).  One instance serves the
+        whole session — every ``infer`` layer and every publish — so
+        queue depth and fsync accounting (``QueueStats``) are global
+        across layers.  Created lazily, recreated after an error retired
+        it; ``close`` tears it down."""
         if self.engine.config.io_impl == "sync":
             return None
         if self._io_sched is None or self._io_sched.closed:
@@ -376,33 +378,96 @@ class AtlasSession:
             spills = layers[done].spills
 
         cfg = self.engine.config
-        for l in range(done, len(specs)):
-            # discard partial output of a crashed attempt at this layer
-            out_dir = os.path.join(self.workdir, f"layer_{l + 1}")
-            if os.path.exists(out_dir):
-                shutil.rmtree(out_dir)
-            layer_spills, m = self.engine.run_layer(
-                csr, in_deg, spills, specs[l], out_dir, layer_index=l
-            )
-            metrics.append(m)
-            # advance the manifest BEFORE deleting the previous layer's
-            # spills: a crash in between resumes from the new layer; the
-            # reverse order would leave a manifest pointing at deleted
-            # files, making resume impossible
-            manifest.completed_layers = l + 1
-            manifest.spills[l + 1] = [f.path for f in layer_spills.files]
-            manifest.save(manifest_path)
-            if cfg.delete_intermediate and l > 0:
-                spills.delete_all()
-                layers.pop(l, None)
-            spills = layer_spills
-            layers[l + 1] = self._handle(l + 1, layer_spills, specs[l].out_dim)
+        # one write-back scheduler for the whole run: queue depth, arena
+        # pool, and QueueStats are global across layers instead of
+        # fragmented per run_layer.  Reclaimed at the end of the run —
+        # every layer has already group-committed by then, so the close
+        # below only stops the I/O thread.
+        scheduler = self._publish_scheduler() if done < len(specs) else None
+        pending_commit = None
+        try:
+            for l in range(done, len(specs)):
+                # discard partial output of a crashed attempt at this layer
+                out_dir = os.path.join(self.workdir, f"layer_{l + 1}")
+                if os.path.exists(out_dir):
+                    shutil.rmtree(out_dir)
+                # the previous layer's commit (barrier-wait -> manifest
+                # advance -> spill GC) rides into run_layer, which calls
+                # it after its own pipeline has started — the group
+                # commit overlaps this layer's first chunk reads
+                layer_spills, m, barrier_wait = self.engine.run_layer(
+                    csr, in_deg, spills, specs[l], out_dir, layer_index=l,
+                    scheduler=scheduler, pending_commit=pending_commit,
+                )
+                metrics.append(m)
+                pending_commit = self._layer_commit(
+                    manifest, manifest_path, l, layer_spills, barrier_wait,
+                    spills, layers,
+                )
+                spills = layer_spills
+                layers[l + 1] = self._handle(
+                    l + 1, layer_spills, specs[l].out_dim
+                )
+            if pending_commit is not None:
+                pending_commit()
+            if scheduler is not None:
+                scheduler.close(commit=False)
+                self._io_sched = None
+        except BaseException:
+            # the last *finished* layer's commit may still be pending
+            # (its data is complete; only barrier+manifest were deferred)
+            # — attempt it so resume restarts after it, but never mask
+            # the original error.  The closure is idempotent, so a commit
+            # that already ran (or already failed) inside run_layer is a
+            # no-op here.
+            if pending_commit is not None:
+                try:
+                    pending_commit()
+                except BaseException:
+                    pass
+            # retire the run-shared scheduler: a sticky I/O error must
+            # not poison later publishes; the lazy getter recreates it
+            if scheduler is not None:
+                scheduler.close(commit=False, raise_error=False)
+                self._io_sched = None
+            raise
 
         if not layers:  # zero specs: the "final" layer is the input itself
             layers[0] = self._handle(0, spills, store.feat_dim)
         result = RunResult(manifest=manifest, metrics=metrics, layers=layers)
         self._last_result = result
         return result
+
+    def _layer_commit(
+        self, manifest, manifest_path, l, layer_spills, barrier_wait,
+        prev_spills, layers,
+    ):
+        """Build layer ``l``'s deferred commit closure: join the
+        overlapped group commit, then advance the manifest, then drop the
+        layer's *input* spills.  The ordering is load-bearing twice over:
+        the barrier completes strictly before the manifest records the
+        layer (data durable -> manifest advance, the PR 5 crash window),
+        and the manifest is saved strictly before the previous spills are
+        deleted (a crash in between resumes from the new layer; the
+        reverse would leave the manifest pointing at deleted files).
+        Idempotent — ``infer`` may retry it on its error path after
+        ``run_layer`` already ran it."""
+        cfg = self.engine.config
+        state = {"attempted": False}
+
+        def commit() -> None:
+            if state["attempted"]:
+                return
+            state["attempted"] = True
+            barrier_wait()
+            manifest.completed_layers = l + 1
+            manifest.spills[l + 1] = [f.path for f in layer_spills.files]
+            manifest.save(manifest_path)
+            if cfg.delete_intermediate and l > 0:
+                prev_spills.delete_all()
+                layers.pop(l, None)
+
+        return commit
 
     @staticmethod
     def _handle(layer: int, spills: SpillSet, dim: int) -> LayerHandle:

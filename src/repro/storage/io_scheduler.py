@@ -278,6 +278,16 @@ class WritebackIOScheduler:
             self._dirty_files.add(path)
             self._dirty_dirs.add(os.path.dirname(os.path.abspath(path)))
 
+    def drain(self) -> None:
+        """Wait until every queued write has reached the OS and surface
+        any deferred I/O error.  After ``drain`` the files *exist* and
+        are readable (the next layer may stream them); they are durable
+        only after the next ``barrier``.  This split is what lets the
+        engine overlap the fsync group commit with the next layer's
+        reads without racing them against unwritten files."""
+        self._worker.drain()
+        self._worker.raise_pending()
+
     def barrier(self) -> float:
         """Group commit: drain the queue, surface any deferred error,
         then fsync every dirty file and containing directory once.
