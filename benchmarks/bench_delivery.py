@@ -144,13 +144,16 @@ def run_engine(
     backend: str = "numpy",
     io_impl: str = "writeback",
     pipeline: str = "auto",
+    trace=None,
 ):
     """Full run_layer on a real on-disk store.  ``impl`` selects BOTH the
     eviction-policy impl and the layer-tail impl (python = full scalar
     oracle baseline, array = the vectorized engine); ``io_impl`` selects
     the spill durability path (sync fsync-per-spill oracle vs async
     write-back + group commit); ``pipeline`` selects serial vs the
-    double-buffered staging ring for device aggregation."""
+    double-buffered staging ring for device aggregation.  ``trace`` is a
+    ``repro.obs.trace.Tracer`` to record the run's per-thread timeline
+    into (plus the background RSS/disk sampler)."""
     d = feats.shape[1]
     specs = init_gnn_params("gcn", [d, 8], seed=seed)
     cfg = AtlasConfig(
@@ -163,17 +166,19 @@ def run_engine(
         io_impl=io_impl,
         pipeline=pipeline,
         seed=seed,
+        sample_interval_s=0.05 if trace is not None else 0.0,
     )
     with tempfile.TemporaryDirectory() as td:
         store = GraphStore.create(td + "/store", csr, feats, num_partitions=4)
-        session = AtlasSession(store, config=cfg, workdir=td + "/work")
+        session = AtlasSession(store, config=cfg, workdir=td + "/work",
+                               trace=trace)
         t0 = time.perf_counter()
         result = session.infer(specs)
         seconds = time.perf_counter() - t0
         spills, metrics = result.final.spills, result.metrics
         out = spills_to_dense(spills, csr.num_vertices, specs[-1].out_dim)
     m = metrics[0]
-    return {
+    rec = {
         "impl": impl,
         "backend": backend,
         "io_impl": io_impl,
@@ -193,8 +198,14 @@ def run_engine(
         "aggregate_seconds": m.aggregate_seconds,
         "h2d_seconds": m.h2d_seconds,
         "pipeline_stall_seconds": m.pipeline_stall_seconds,
+        # run-wide I/O queue stats, captured by the session before the
+        # scheduler closed (None under io_impl="sync": no queue exists)
+        "queue_stats": result.queue_stats,
         "output": out,
     }
+    if trace is not None:
+        rec["telemetry"] = result.telemetry
+    return rec
 
 
 def capture_graduation_stream(csr, feats, hot_slots, chunk_vertices, seed):
@@ -406,6 +417,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write raw results as JSON to PATH ('-' for stdout)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="run one extra traced engine pass and export its "
+                         "Perfetto timeline (Chrome trace-event JSON) to "
+                         "PATH; inspect with repro.launch.obs_report")
     args = ap.parse_args()
 
     hot_slots = max(16, int(args.vertices * args.hot_frac))
@@ -419,6 +434,13 @@ def main():
     best = lambda runs: min(runs, key=lambda r: r["seconds"])
     reps = max(1, args.repeats)
     feat_td = tempfile.TemporaryDirectory(prefix="bench_delivery_feats_")
+    feats_cache: list = []  # built once, shared by every mode leg
+
+    def get_feats():
+        if not feats_cache:
+            feats_cache.append(build_features(args, feat_td.name))
+        return feats_cache[0]
+
     if args.mode in ("micro", "both"):
         chunks = build_chunks(csr, args.chunk_vertices)
         res = {
@@ -430,7 +452,7 @@ def main():
         }
         all_results["micro"] = {**res, "speedup": report("micro (_deliver only)", res)}
     if args.mode in ("engine", "both"):
-        feats = build_features(args, feat_td.name)
+        feats = get_feats()
         res = {
             impl: best([
                 run_engine(csr, feats, impl, hot_slots, args.chunk_vertices,
@@ -486,7 +508,7 @@ def main():
     if args.mode == "io":
         # ISSUE 5: spill durability impls across a hot-store sweep, with
         # the vectorized engine fixed so only io_impl varies
-        feats = build_features(args, feat_td.name)
+        feats = get_feats()
         hot_fracs = (
             [float(x) for x in args.hot_fracs.split(",")]
             if args.hot_fracs
@@ -501,7 +523,7 @@ def main():
     if args.mode == "backend":
         # ROADMAP item: numpy vs device chunk aggregation end-to-end, with
         # the array policy impl fixed so only the aggregation backend varies
-        feats = build_features(args, feat_td.name)
+        feats = get_feats()
         other = args.backend if args.backend != "numpy" else "jax"
         res = {
             backend: best([
@@ -531,6 +553,25 @@ def main():
         )
         print(f"  speedup ({other} over numpy): {speedup:.2f}x")
         all_results["backend"] = {**res, f"{other}_speedup": speedup}
+    if args.trace:
+        # one extra traced pass of the full engine (vectorized impl):
+        # per-thread timeline + telemetry, Perfetto-loadable, analysable
+        # with `python -m repro.launch.obs_report <trace> --check`
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer()
+        traced = run_engine(
+            csr, get_feats(), "array", hot_slots, args.chunk_vertices,
+            args.seed, backend=args.backend, io_impl=args.io_impl,
+            pipeline=args.pipeline, trace=tracer,
+        )
+        traced.pop("output")
+        path = tracer.export(args.trace)
+        print(
+            f"\ntraced engine pass: {traced['seconds']:.3f}s, "
+            f"{tracer.num_spans} spans -> {path}"
+        )
+        all_results["traced"] = traced
     feat_td.cleanup()
     if args.json == "-":
         print(json.dumps(all_results, indent=2))

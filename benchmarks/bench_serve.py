@@ -38,12 +38,27 @@ import time
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.obs.metrics import Histogram
 from repro.session import AtlasSession
 from repro.storage.iostats import IOStats
 from repro.storage.layout import GraphStore
 from repro.storage.spill import SpillSet, write_spill
 
 SERVE_LAYER = 1  # the layer number the benchmark publishes under
+
+
+def latency_ms(hist: Histogram) -> dict:
+    """Per-batch latency summary in milliseconds from a seconds-valued
+    log-bucket histogram (quantiles interpolated within buckets)."""
+    s = hist.snapshot()
+    return {
+        "count": s["count"],
+        "mean_ms": round(s["mean"] * 1e3, 4),
+        "max_ms": round(s["max"] * 1e3, 4),
+        "p50_ms": round(s["p50"] * 1e3, 4),
+        "p95_ms": round(s["p95"] * 1e3, 4),
+        "p99_ms": round(s["p99"] * 1e3, 4),
+    }
 
 
 def build_spillset(
@@ -115,9 +130,12 @@ def run_workload(
         for q in queries[:warm_batches]:
             eng.lookup(q)
         timed = queries[warm_batches:]
+        hist = Histogram()
         t0 = time.perf_counter()
         for q in timed:
+            b0 = time.perf_counter()
             eng.lookup(q)
+            hist.observe(time.perf_counter() - b0)
         seconds = time.perf_counter() - t0
         rec = {
             "cache_mb": cache_bytes / (1 << 20),
@@ -129,6 +147,7 @@ def run_workload(
             "disk_blocks_read": eng.blocks_read,
             "disk_bytes_read": eng.stats.bytes_read,
             "version": eng.version,
+            "latency": latency_ms(hist),
         }
         if eng.cache is not None:
             rec["hit_rate"] = round(eng.cache.hit_rate(), 4)
@@ -154,6 +173,9 @@ def run_concurrent(
     errors: list[str] = []
     lookups = [0] * args.concurrent
     rows_checked = [0] * args.concurrent
+    # one histogram per reader (no lock contention in the hot loop),
+    # merged into a single latency distribution at the end
+    hists = [Histogram() for _ in range(args.concurrent)]
 
     def expected(version: int) -> np.ndarray:
         # publish i (1-based epoch) carries variant (epoch-1) % len(refs)
@@ -171,7 +193,9 @@ def run_concurrent(
                     ref = expected(eng.version)
                     for _ in range(args.batches_per_open):
                         q = rng.integers(0, vertices, size=args.batch)
+                        b0 = time.perf_counter()
                         got = eng.lookup(q)
+                        hists[ti].observe(time.perf_counter() - b0)
                         if not np.array_equal(got, ref[q]):
                             errors.append(
                                 f"reader {ti}: rows diverged from pinned "
@@ -218,6 +242,9 @@ def run_concurrent(
             errors.append(f"reader {ti} failed to stop (possible deadlock)")
     seconds = time.perf_counter() - t0
     gc_removed += len(session.gc(SERVE_LAYER))
+    merged = Histogram()
+    for h in hists:
+        merged.merge(h)
     rec = {
         "readers": args.concurrent,
         "publishes": publishes,
@@ -227,6 +254,7 @@ def run_concurrent(
         "queries_per_s": round(sum(lookups) / seconds, 1),
         "versions_gc_removed": gc_removed,
         "versions_remaining": session.store.servable_versions(SERVE_LAYER),
+        "latency": latency_ms(merged),
         "errors": errors,
     }
     if errors:
@@ -290,11 +318,15 @@ def main():
                 refs.append(rows)
             rec = run_concurrent(session, variants, refs, args)
             results["concurrent"] = rec
+            lat = rec["latency"]
             print(f"  {rec['lookups']} lookups ({rec['rows_checked']} rows "
                   f"bit-checked) across {rec['publishes']} publishes in "
                   f"{rec['seconds']}s -> {rec['queries_per_s']} q/s, "
                   f"{rec['versions_gc_removed']} stale versions GC'd, "
                   f"remaining {rec['versions_remaining']}")
+            print(f"  per-batch latency: p50={lat['p50_ms']:.3f}ms "
+                  f"p95={lat['p95_ms']:.3f}ms p99={lat['p99_ms']:.3f}ms "
+                  f"(max {lat['max_ms']:.3f}ms over {lat['count']} batches)")
         else:
             print(f"building servable store: V={args.vertices} d={args.dim} "
                   f"({args.vertices * args.dim * 4 >> 20} MiB rows)")
@@ -336,9 +368,13 @@ def main():
                     rows.append(rec)
                     extra = (f"hit_rate={rec['hit_rate']}" if "hit_rate" in rec
                              else "cache off")
+                    lat = rec["latency"]
                     print(f"  {kind:<8} cache={mb:6.1f}MiB  "
                           f"{rec['queries_per_s']:>10.1f} q/s  "
                           f"{rec['rows_per_s']:>12.1f} rows/s  "
+                          f"p50={lat['p50_ms']:.3f}ms "
+                          f"p95={lat['p95_ms']:.3f}ms "
+                          f"p99={lat['p99_ms']:.3f}ms  "
                           f"blocks_read={rec['disk_blocks_read']:<8d} {extra}")
                 results[kind] = rows
                 base = next((r for r in rows if r["cache_mb"] == 0), None)

@@ -51,6 +51,7 @@ from repro.models.gnn import (
     layer_update,
     self_coefficient,
 )
+from repro.obs.trace import as_tracer
 from repro.storage.coldstore import ColdStore
 from repro.storage.io_scheduler import make_scheduler
 from repro.storage.iostats import IOStats
@@ -88,6 +89,11 @@ class AtlasConfig:
     prefetch_depth: int = 4
     seed: int = 0
     delete_intermediate: bool = True  # drop layer l-1 spills after layer l
+    trace: bool = False  # span tracing (repro.obs): per-thread timelines,
+    # Perfetto-exportable; the session writes trace.json next to the run
+    # manifest.  Zero-cost when False (no-op tracer on every hot path).
+    sample_interval_s: float = 0.0  # >0: background RSS/disk sampler
+    # (repro.obs.sampler) polling at this interval during session runs
 
 
 @dataclasses.dataclass
@@ -215,6 +221,7 @@ class AtlasEngine:
         layer_index: int = 0,
         scheduler=_OWN_SCHEDULER,
         pending_commit=None,
+        tracer=None,
     ):
         """Run one layer.  Default call: makes (and tears down) its own
         write-back scheduler, barriers inline, returns
@@ -228,9 +235,17 @@ class AtlasEngine:
         must invoke it before recording the layer in the run manifest.
         ``pending_commit`` is the previous layer's commit closure: it is
         called once, after this layer's pipeline has started, so the
-        previous barrier overlaps this layer's first chunk reads."""
+        previous barrier overlaps this layer's first chunk reads.
+        ``tracer`` (a ``repro.obs.Tracer``) threads span instrumentation
+        through every pipeline stage; the ``AtlasConfig.trace`` flag makes
+        one when no explicit tracer is passed."""
         cfg = self.config
+        tr = as_tracer(tracer if tracer is not None else cfg.trace)
+        # standalone (non-session) callers with cfg.trace=True can export
+        # the timeline from here after the call returns
+        self.last_tracer = tr
         t0 = time.perf_counter()
+        tr.begin(f"layer_{layer_index}", "layer")
         num_vertices = csr.num_vertices
 
         required = in_deg.astype(np.int64).copy()
@@ -252,6 +267,7 @@ class AtlasEngine:
             stats=read_stats,
             prefetch_depth=cfg.prefetch_depth,
             num_vertices=num_vertices,
+            tracer=tr,
         )
         orch = Orchestrator(required)
         policy = make_policy(
@@ -285,7 +301,7 @@ class AtlasEngine:
         own_scheduler = scheduler is _OWN_SCHEDULER
         if own_scheduler:
             scheduler = make_scheduler(
-                cfg.io_impl, queue_depth=cfg.io_queue_depth
+                cfg.io_impl, queue_depth=cfg.io_queue_depth, tracer=tr
             )
 
         def prep(chunk):
@@ -312,6 +328,7 @@ class AtlasEngine:
                 threaded=cfg.threaded,
                 ingest_impl=cfg.tail_impl,
                 scheduler=scheduler,
+                tracer=tr,
             )
             grad = make_graduation(
                 cfg.tail_impl,
@@ -322,8 +339,11 @@ class AtlasEngine:
                 buffer_rows=cfg.graduation_rows,
                 queue_depth=cfg.queue_depth,
                 threaded=cfg.threaded,
+                tracer=tr,
             )
             aggregate = chunk_aggregate(cfg.backend)
+            if hasattr(aggregate, "tracer"):
+                aggregate.tracer = tr  # h2d spans inside jax/pallas backends
             it = iter(reader) if cfg.threaded else reader.read_serial()
             # staging ring (§4 device pipeline): chunk k+1 preps, stages
             # h2d, and aggregates on a dedicated thread while chunk k is
@@ -331,7 +351,7 @@ class AtlasEngine:
             # index order bit-for-bit
             pipe = make_aggregation_pipeline(
                 cfg.pipeline, cfg.backend, cfg.threaded, it, prep,
-                aggregate, depth=cfg.staging_depth,
+                aggregate, depth=cfg.staging_depth, tracer=tr,
             )
         except BaseException:
             # a failed constructor (bad tail_impl/backend/pipeline) must
@@ -351,6 +371,7 @@ class AtlasEngine:
                     cleanup()
                 except BaseException:
                     pass
+            tr.end(f"layer_{layer_index}", "layer")
             raise
         self_coef = self_coefficient(spec)
         agg_col = spec.in_dim if spec.kind == "sage" else 0
@@ -467,6 +488,7 @@ class AtlasEngine:
                     cleanup()
                 except BaseException:
                     pass
+            tr.end(f"layer_{layer_index}", "layer")
             raise
         finally:
             # unblock the staging + reader threads if we bail out mid-layer
@@ -474,6 +496,7 @@ class AtlasEngine:
 
         cold.close()
 
+        tr.end(f"layer_{layer_index}", "layer")
         span = orch.span_stats()
         tail_seconds = grad.tail_seconds + writer.tail_seconds
         m = LayerMetrics(
@@ -500,7 +523,11 @@ class AtlasEngine:
             barrier_seconds=barrier_seconds,
             bytes_inflight=bytes_inflight,
             aggregate_seconds=pipe.aggregate_seconds,
-            h2d_seconds=getattr(aggregate, "h2d_seconds", 0.0),
+            # read through the pipeline (not the local), so the value is
+            # pinned to the aggregator the pipeline actually drove and the
+            # staged path's read is explicitly ordered after its worker
+            # join (see StagedAggregation.h2d_seconds)
+            h2d_seconds=pipe.h2d_seconds,
             pipeline_stall_seconds=pipe.stall_seconds,
         )
         if not own_scheduler:

@@ -39,6 +39,7 @@ from repro.kernels.edge_block_spmm import (
     auto_blocks,
     edge_block_spmm_padded,
 )
+from repro.obs.trace import NULL_TRACER
 
 
 def chunk_aggregate_numpy(
@@ -127,6 +128,7 @@ class JaxChunkAggregator:
 
     def __init__(self) -> None:
         self.h2d_seconds = 0.0
+        self.tracer = NULL_TRACER
 
     def __call__(self, feats, src_local, dst, weights):
         if len(dst) == 0:
@@ -147,13 +149,14 @@ class JaxChunkAggregator:
         seg_p[:m] = seg_ids
         w_p = np.zeros(pad, dtype=np.float32)
         w_p[:m] = weights
-        t0 = time.monotonic()
-        feats_d = jax.device_put(np.ascontiguousarray(feats, np.float32))
-        src_d = jax.device_put(src_p)
-        seg_d = jax.device_put(seg_p)
-        w_d = jax.device_put(w_p)
-        jax.block_until_ready((feats_d, src_d, seg_d, w_d))
-        self.h2d_seconds += time.monotonic() - t0
+        with self.tracer.span("h2d", "h2d"):
+            t0 = time.monotonic()
+            feats_d = jax.device_put(np.ascontiguousarray(feats, np.float32))
+            src_d = jax.device_put(src_p)
+            seg_d = jax.device_put(seg_p)
+            w_d = jax.device_put(w_p)
+            jax.block_until_ready((feats_d, src_d, seg_d, w_d))
+            self.h2d_seconds += time.monotonic() - t0
         out = _segment_messages(
             feats_d, src_d, seg_d, w_d, num_segments=n_seg + 1
         )
@@ -211,6 +214,7 @@ class PallasChunkAggregator:
             else None
         )
         self.h2d_seconds = 0.0
+        self.tracer = NULL_TRACER
         self._feat_scratch: dict[tuple[int, int], np.ndarray] = {}
         self._edge_scratch: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
 
@@ -272,15 +276,16 @@ class PallasChunkAggregator:
         )
         feats_p = self._feats(vp, dp, feats)
 
-        t0 = time.monotonic()
-        operands = (
-            jax.device_put(src_p),
-            jax.device_put(dst_p),
-            jax.device_put(w_p),
-            jax.device_put(feats_p),
-        )
-        jax.block_until_ready(operands)
-        self.h2d_seconds += time.monotonic() - t0
+        with self.tracer.span("h2d", "h2d"):
+            t0 = time.monotonic()
+            operands = (
+                jax.device_put(src_p),
+                jax.device_put(dst_p),
+                jax.device_put(w_p),
+                jax.device_put(feats_p),
+            )
+            jax.block_until_ready(operands)
+            self.h2d_seconds += time.monotonic() - t0
 
         out = edge_block_spmm_padded(
             *operands,

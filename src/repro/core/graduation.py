@@ -44,6 +44,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.util.offload import OffloadWorker
 
 
@@ -69,11 +70,13 @@ class GraduationProcessor:
         queue_depth: int = 20,
         threaded: bool = True,
         num_buffers: int = 2,
+        tracer=None,
     ):
         self.transform = transform
         self.sink = sink
         self.dim = dim
         self.dtype = np.dtype(dtype)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.buffer_rows = max(1, buffer_rows)
         self.graduated = 0
         self.offload_batches = 0
@@ -131,23 +134,24 @@ class GraduationProcessor:
         if n == 0:
             return
         self._raise_pending()
-        t0 = time.perf_counter()
-        ids = np.asarray(ids)
-        rows = np.asarray(rows)
-        pos = 0
-        while pos < n:
-            take = min(self.buffer_rows - self._fill, n - pos)
-            f = self._fill
-            self._buf_ids[self._active][f : f + take] = ids[pos : pos + take]
-            self._buf_rows[self._active][f : f + take] = rows[pos : pos + take]
-            self._fill += take
-            pos += take
-            if self._fill == self.buffer_rows:
-                self._buffer_s += time.perf_counter() - t0
-                self._emit()
-                t0 = time.perf_counter()
-        self.graduated += n
-        self._buffer_s += time.perf_counter() - t0
+        with self.tracer.span("graduate_buffer", "tail"):
+            t0 = time.perf_counter()
+            ids = np.asarray(ids)
+            rows = np.asarray(rows)
+            pos = 0
+            while pos < n:
+                take = min(self.buffer_rows - self._fill, n - pos)
+                f = self._fill
+                self._buf_ids[self._active][f : f + take] = ids[pos : pos + take]
+                self._buf_rows[self._active][f : f + take] = rows[pos : pos + take]
+                self._fill += take
+                pos += take
+                if self._fill == self.buffer_rows:
+                    self._buffer_s += time.perf_counter() - t0
+                    self._emit()
+                    t0 = time.perf_counter()
+            self.graduated += n
+            self._buffer_s += time.perf_counter() - t0
 
     def add_gather(
         self, ids: np.ndarray, source: np.ndarray, rows_index: np.ndarray
@@ -160,29 +164,30 @@ class GraduationProcessor:
         if n == 0:
             return
         self._raise_pending()
-        t0 = time.perf_counter()
-        ids = np.asarray(ids)
-        rows_index = np.asarray(rows_index)
-        pos = 0
-        while pos < n:
-            take = min(self.buffer_rows - self._fill, n - pos)
-            f = self._fill
-            self._buf_ids[self._active][f : f + take] = ids[pos : pos + take]
-            np.take(
-                source,
-                rows_index[pos : pos + take],
-                axis=0,
-                out=self._buf_rows[self._active][f : f + take],
-                mode="clip",  # in-range by construction; avoids staging
-            )
-            self._fill += take
-            pos += take
-            if self._fill == self.buffer_rows:
-                self._buffer_s += time.perf_counter() - t0
-                self._emit()
-                t0 = time.perf_counter()
-        self.graduated += n
-        self._buffer_s += time.perf_counter() - t0
+        with self.tracer.span("graduate_buffer", "tail"):
+            t0 = time.perf_counter()
+            ids = np.asarray(ids)
+            rows_index = np.asarray(rows_index)
+            pos = 0
+            while pos < n:
+                take = min(self.buffer_rows - self._fill, n - pos)
+                f = self._fill
+                self._buf_ids[self._active][f : f + take] = ids[pos : pos + take]
+                np.take(
+                    source,
+                    rows_index[pos : pos + take],
+                    axis=0,
+                    out=self._buf_rows[self._active][f : f + take],
+                    mode="clip",  # in-range by construction; avoids staging
+                )
+                self._fill += take
+                pos += take
+                if self._fill == self.buffer_rows:
+                    self._buffer_s += time.perf_counter() - t0
+                    self._emit()
+                    t0 = time.perf_counter()
+            self.graduated += n
+            self._buffer_s += time.perf_counter() - t0
 
     # -------------------------------------------------------------- emit
     def _emit(self) -> None:
@@ -197,12 +202,13 @@ class GraduationProcessor:
             self._worker.submit(item)
             # block for a recycled buffer, re-checking for consumer death
             # so a dead offload thread cannot strand us here
-            while True:
-                try:
-                    self._active = self._free.get(timeout=0.05)
-                    return
-                except queue.Empty:
-                    self._worker.raise_pending()
+            with self.tracer.span("emit_wait", "stall"):
+                while True:
+                    try:
+                        self._active = self._free.get(timeout=0.05)
+                        return
+                    except queue.Empty:
+                        self._worker.raise_pending()
         else:
             self._process(item)
             self._active = self._free.get()
@@ -211,27 +217,32 @@ class GraduationProcessor:
         """Offload-thread body: dense transform, then hand results to the
         sink and recycle the buffer."""
         buf, n = item
-        c0 = time.perf_counter()
-        ids = self._buf_ids[buf][:n]
-        rows = self._buf_rows[buf][:n]
-        c1 = time.perf_counter()
-        w0 = time.perf_counter()
-        out = self.transform(rows)
-        w1 = time.perf_counter()
-        c2 = time.perf_counter()
-        # the buffer is recycled below: nothing crossing into the sink may
-        # alias it (identity transforms do; real dense updates allocate)
-        if np.shares_memory(out, self._buf_rows[buf]):
-            out = out.copy()
-        out_ids = ids.copy()
-        c3 = time.perf_counter()
-        w2 = time.perf_counter()
-        self.sink(out_ids, out)
-        w3 = time.perf_counter()
-        self._free.put(buf)
-        self._transform_s += w1 - w0
-        self._sink_s += w3 - w2
-        self._proc_s += (c1 - c0) + (c3 - c2)
+        tr = self.tracer
+        with tr.span("graduate_offload", "tail"):
+            c0 = time.perf_counter()
+            ids = self._buf_ids[buf][:n]
+            rows = self._buf_rows[buf][:n]
+            c1 = time.perf_counter()
+            with tr.span("transform", "transform"):
+                w0 = time.perf_counter()
+                out = self.transform(rows)
+                w1 = time.perf_counter()
+            c2 = time.perf_counter()
+            # the buffer is recycled below: nothing crossing into the sink
+            # may alias it (identity transforms do; real dense updates
+            # allocate)
+            if np.shares_memory(out, self._buf_rows[buf]):
+                out = out.copy()
+            out_ids = ids.copy()
+            c3 = time.perf_counter()
+            with tr.span("sink", "sink"):
+                w2 = time.perf_counter()
+                self.sink(out_ids, out)
+                w3 = time.perf_counter()
+            self._free.put(buf)
+            self._transform_s += w1 - w0
+            self._sink_s += w3 - w2
+            self._proc_s += (c1 - c0) + (c3 - c2)
 
     # ------------------------------------------------------------- flush
     def flush(self) -> None:
@@ -294,14 +305,15 @@ class PythonGraduationProcessor(GraduationProcessor):
         if len(ids) == 0:
             return
         self._raise_pending()
-        t0 = time.perf_counter()
-        self._ids.append(np.asarray(ids))
-        self._rows.append(np.asarray(rows))
-        self._count += len(ids)
-        self.graduated += len(ids)
-        self._buffer_s += time.perf_counter() - t0
-        while self._count >= self.buffer_rows:
-            self._emit_n(self.buffer_rows)
+        with self.tracer.span("graduate_buffer", "tail"):
+            t0 = time.perf_counter()
+            self._ids.append(np.asarray(ids))
+            self._rows.append(np.asarray(rows))
+            self._count += len(ids)
+            self.graduated += len(ids)
+            self._buffer_s += time.perf_counter() - t0
+            while self._count >= self.buffer_rows:
+                self._emit_n(self.buffer_rows)
 
     def add_gather(self, ids, source, rows_index) -> None:
         self._raise_pending()
@@ -326,13 +338,17 @@ class PythonGraduationProcessor(GraduationProcessor):
 
     def _process(self, item) -> None:
         ids, rows = item
-        t0 = time.perf_counter()
-        out = self.transform(rows)
-        t1 = time.perf_counter()
-        self.sink(ids, out)
-        t2 = time.perf_counter()
-        self._transform_s += t1 - t0
-        self._sink_s += t2 - t1
+        tr = self.tracer
+        with tr.span("graduate_offload", "tail"):
+            with tr.span("transform", "transform"):
+                t0 = time.perf_counter()
+                out = self.transform(rows)
+                t1 = time.perf_counter()
+            with tr.span("sink", "sink"):
+                self.sink(ids, out)
+                t2 = time.perf_counter()
+            self._transform_s += t1 - t0
+            self._sink_s += t2 - t1
 
     def flush(self) -> None:
         self._raise_pending()

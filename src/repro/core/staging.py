@@ -31,6 +31,8 @@ import threading
 import time
 from typing import Callable, Iterable, Iterator
 
+from ..obs.trace import NULL_TRACER
+
 
 class SerialAggregation:
     """Pass-through pipeline: aggregate on the caller's thread.
@@ -49,19 +51,30 @@ class SerialAggregation:
         chunks: Iterable,
         prep: Callable,
         aggregate: Callable,
+        tracer=None,
     ) -> None:
         self._chunks = chunks
         self._prep = prep
         self._aggregate = aggregate
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.aggregate_seconds = 0.0
         self.stall_seconds = 0.0
 
+    @property
+    def h2d_seconds(self) -> float:
+        """Host->device staging time from the aggregator this pipeline
+        owns (0.0 for host-only aggregators like numpy)."""
+        return getattr(self._aggregate, "h2d_seconds", 0.0)
+
     def __iter__(self) -> Iterator:
+        tr = self.tracer
         for chunk in self._chunks:
-            src_local, dst, w = self._prep(chunk)
-            t0 = time.perf_counter()
-            result = self._aggregate(chunk.feats, src_local, dst, w)
-            self.aggregate_seconds += time.perf_counter() - t0
+            with tr.span("prep", "prep"):
+                src_local, dst, w = self._prep(chunk)
+            with tr.span("aggregate", "aggregate"):
+                t0 = time.perf_counter()
+                result = self._aggregate(chunk.feats, src_local, dst, w)
+                self.aggregate_seconds += time.perf_counter() - t0
             yield chunk, result
 
     def close(self) -> None:
@@ -81,18 +94,30 @@ class StagedAggregation:
         prep: Callable,
         aggregate: Callable,
         depth: int = 2,
+        tracer=None,
     ) -> None:
         if depth < 1:
             raise ValueError(f"staging depth must be >= 1, got {depth}")
         self._chunks = chunks
         self._prep = prep
         self._aggregate = aggregate
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._errors: list[BaseException] = []
         self._thread: threading.Thread | None = None
         self.aggregate_seconds = 0.0
         self.stall_seconds = 0.0
+
+    @property
+    def h2d_seconds(self) -> float:
+        """Host->device staging time from the pipeline-owned aggregator.
+
+        Safe to read after iteration completes: the generator's close (or
+        exhaustion) joins the stage thread, so the worker's last
+        ``h2d_seconds`` update happens-before this read.
+        """
+        return getattr(self._aggregate, "h2d_seconds", 0.0)
 
     # ------------------------------------------------------ stage thread
     def _put_checked(self, item) -> bool:
@@ -105,14 +130,17 @@ class StagedAggregation:
         return False
 
     def _worker(self) -> None:
+        tr = self.tracer
         try:
             for chunk in self._chunks:
                 if self._stop.is_set():
                     break
-                src_local, dst, w = self._prep(chunk)
-                t0 = time.perf_counter()
-                result = self._aggregate(chunk.feats, src_local, dst, w)
-                self.aggregate_seconds += time.perf_counter() - t0
+                with tr.span("prep", "prep"):
+                    src_local, dst, w = self._prep(chunk)
+                with tr.span("aggregate", "aggregate"):
+                    t0 = time.perf_counter()
+                    result = self._aggregate(chunk.feats, src_local, dst, w)
+                    self.aggregate_seconds += time.perf_counter() - t0
                 if not self._put_checked((chunk, result)):
                     break
         except BaseException as e:  # noqa: BLE001 — carried to consumer
@@ -127,19 +155,31 @@ class StagedAggregation:
         )
         self._thread = t
         t.start()
+        tr = self.tracer
         try:
             while True:
-                t0 = time.perf_counter()
+                # one stall span covers the whole wait for this item,
+                # however many 0.05s poll ticks it takes; stall_seconds
+                # keeps accruing per tick exactly as before
+                tr.begin("ring_wait", "stall")
                 try:
-                    item = self._q.get(timeout=0.05)
-                except queue.Empty:
-                    self.stall_seconds += time.perf_counter() - t0
-                    if not t.is_alive() and self._q.empty():
-                        # thread died without managing to queue its
-                        # sentinel (stop raced it) — surface the error
+                    while True:
+                        t0 = time.perf_counter()
+                        try:
+                            item = self._q.get(timeout=0.05)
+                        except queue.Empty:
+                            self.stall_seconds += time.perf_counter() - t0
+                            if not t.is_alive() and self._q.empty():
+                                # thread died without managing to queue
+                                # its sentinel (stop raced it) — surface
+                                # the error
+                                item = None
+                                break
+                            continue
+                        self.stall_seconds += time.perf_counter() - t0
                         break
-                    continue
-                self.stall_seconds += time.perf_counter() - t0
+                finally:
+                    tr.end("ring_wait", "stall")
                 if item is None:
                     break
                 yield item
@@ -171,6 +211,7 @@ def make_aggregation_pipeline(
     prep: Callable,
     aggregate: Callable,
     depth: int = 2,
+    tracer=None,
 ):
     """'serial', 'staged', or 'auto' (staged for device backends when the
     engine runs threaded; the numpy backend stays serial — its aggregate
@@ -180,7 +221,9 @@ def make_aggregation_pipeline(
             "staged" if threaded and backend != "numpy" else "serial"
         )
     if mode == "serial":
-        return SerialAggregation(chunks, prep, aggregate)
+        return SerialAggregation(chunks, prep, aggregate, tracer=tracer)
     if mode == "staged":
-        return StagedAggregation(chunks, prep, aggregate, depth=depth)
+        return StagedAggregation(
+            chunks, prep, aggregate, depth=depth, tracer=tracer
+        )
     raise ValueError(f"unknown pipeline mode {mode!r}")

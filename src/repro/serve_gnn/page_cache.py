@@ -25,6 +25,7 @@ import threading
 import numpy as np
 
 from repro.core.eviction import ArrayBucketList
+from repro.obs.trace import NULL_TRACER
 from repro.storage.iostats import IOStats
 
 Block = tuple[np.ndarray, np.ndarray]  # (ids u64 [n], rows [n, dim])
@@ -74,12 +75,14 @@ class ShardedPageCache:
         budget_bytes: int,
         num_shards: int = 4,
         stats: IOStats | None = None,
+        tracer=None,
     ):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         self.num_shards = num_shards
         self.budget_bytes = int(budget_bytes)
         self.stats = stats if stats is not None else IOStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         per = max(1, self.budget_bytes // num_shards)
         self._shards = [_Shard(int(num_keys), per) for _ in range(num_shards)]
         self._counter_lock = threading.Lock()  # hits/misses/evictions
@@ -92,6 +95,9 @@ class ShardedPageCache:
         """Fetch blocks for `keys`; None marks a miss.  Hits are touched
         (moved to MRU) per shard in one batched splice."""
         keys = np.asarray(keys, dtype=np.int64)
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("cache_get", "serve")
         out: list[Block | None] = [None] * len(keys)
         hit_bytes = 0
         hits = 0
@@ -118,11 +124,16 @@ class ShardedPageCache:
             self.misses += len(keys) - hits
         if hit_bytes:
             self.stats.add_read(hit_bytes)
+        if tr.enabled:
+            tr.end("cache_get", "serve")
         return out
 
     # ------------------------------------------------------------- write
     def put_many(self, keys: np.ndarray, blocks: list[Block]) -> None:
         keys = np.asarray(keys, dtype=np.int64)
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("cache_put", "serve")
         shard_of = keys % self.num_shards
         admitted_bytes = 0
         for s in np.unique(shard_of).tolist():
@@ -149,6 +160,8 @@ class ShardedPageCache:
                 self.evicted_blocks += evicted
         if admitted_bytes:
             self.stats.add_write(admitted_bytes)
+        if tr.enabled:
+            tr.end("cache_put", "serve")
 
     # ----------------------------------------------------------- queries
     @property

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.serve_gnn.page_cache import ShardedPageCache
 from repro.serve_gnn.servable import ServableLayer
 from repro.storage.iostats import IOStats
@@ -44,10 +45,12 @@ class VertexQueryEngine:
         cache: ShardedPageCache | None = None,
         stats: IOStats | None = None,
         coalesce: bool = True,
+        tracer=None,
     ):
         self.layer = layer
         self.cache = cache
         self.stats = stats if stats is not None else IOStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.coalesce = coalesce  # span-read + single-gather fast path
         self.queries = 0
         self.rows_served = 0
@@ -60,6 +63,13 @@ class VertexQueryEngine:
     def lookup(self, vertex_ids: np.ndarray) -> np.ndarray:
         """Rows for `vertex_ids` (any order, duplicates fine), in request
         order, dtype = the layer's storage dtype."""
+        tr = self.tracer
+        if not tr.enabled:
+            return self._lookup(vertex_ids)
+        with tr.span("lookup", "serve"):
+            return self._lookup(vertex_ids)
+
+    def _lookup(self, vertex_ids: np.ndarray) -> np.ndarray:
         q = np.asarray(vertex_ids, dtype=np.uint64).ravel()
         self.queries += 1
         self.last_blocks_read = 0
@@ -95,18 +105,19 @@ class VertexQueryEngine:
         if len(miss):
             self.last_blocks_read = len(miss)
             self.blocks_read += len(miss)
-            if self.coalesce:
-                self._fetch_coalesced(
-                    miss, need_keys, f[starts], starts, ends, gkey, local,
-                    blocks, out, scattered,
-                )
-            else:
-                # oracle path: one fetch + one scatter per missed block
-                fetched = self.layer.read_blocks_by_keys(
-                    need_keys[miss], stats=self.stats, with_ids=False
-                )
-                for i, blk in zip(miss.tolist(), fetched):
-                    blocks[i] = blk
+            with self.tracer.span("serve_fetch", "read"):
+                if self.coalesce:
+                    self._fetch_coalesced(
+                        miss, need_keys, f[starts], starts, ends, gkey,
+                        local, blocks, out, scattered,
+                    )
+                else:
+                    # oracle path: one fetch + one scatter per missed block
+                    fetched = self.layer.read_blocks_by_keys(
+                        need_keys[miss], stats=self.stats, with_ids=False
+                    )
+                    for i, blk in zip(miss.tolist(), fetched):
+                        blocks[i] = blk
             if self.cache is not None:
                 self.cache.put_many(
                     need_keys[miss], [blocks[i] for i in miss.tolist()]

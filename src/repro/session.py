@@ -53,6 +53,8 @@ import threading
 from repro.core.atlas import AtlasConfig, AtlasEngine, LayerMetrics
 from repro.graphs.csr import degrees_from_csr
 from repro.models.gnn import GNNLayerSpec
+from repro.obs.sampler import ResourceSampler
+from repro.obs.trace import as_tracer
 from repro.serve_gnn.page_cache import ShardedPageCache
 from repro.serve_gnn.query import VertexQueryEngine
 from repro.serve_gnn.servable import ServableLayer
@@ -198,6 +200,14 @@ class RunResult:
     manifest: RunManifest
     metrics: list[LayerMetrics]
     layers: dict[int, LayerHandle]
+    # run-wide observability (ISSUE 7): the shared write-back scheduler's
+    # final QueueStats snapshot (None under io_impl='sync'), the unified
+    # telemetry tree (layers + io queue + trace category totals +
+    # resource gauges; None when nothing was collected), and the path of
+    # the exported Perfetto trace (None when tracing was off)
+    queue_stats: dict | None = None
+    telemetry: dict | None = None
+    trace_path: str | None = None
 
     @property
     def final(self) -> LayerHandle:
@@ -238,8 +248,9 @@ class SessionReader(VertexQueryEngine):
         servable: ServableLayer,
         cache: ShardedPageCache | None = None,
         stats: IOStats | None = None,
+        tracer=None,
     ):
-        super().__init__(servable, cache=cache, stats=stats)
+        super().__init__(servable, cache=cache, stats=stats, tracer=tracer)
         self._session = session
         self.layer_index = layer_index
         self.version = epoch
@@ -279,10 +290,17 @@ class AtlasSession:
         config: AtlasConfig | None = None,
         workdir: str | None = None,
         engine: AtlasEngine | None = None,
+        trace=None,
     ):
         self.store = GraphStore.open(store) if isinstance(store, str) else store
         self.engine = engine if engine is not None else AtlasEngine(config)
         self.workdir = workdir or os.path.join(self.store.root, "run")
+        # trace: None defers to AtlasConfig.trace; True/False overrides
+        # it; a Tracer instance is used directly (one timeline can span
+        # several sessions/runs)
+        if trace is None:
+            trace = self.engine.config.trace
+        self.tracer = as_tracer(trace)
         self._lock = threading.Lock()  # pins + manifest reads + GC
         self._publish_lock = threading.Lock()  # serializes publishes
         self._pins: dict[tuple[int, int], int] = {}  # (layer, epoch) -> count
@@ -305,6 +323,7 @@ class AtlasSession:
             self._io_sched = make_scheduler(
                 self.engine.config.io_impl,
                 queue_depth=self.engine.config.io_queue_depth,
+                tracer=self.tracer,
             )
         return self._io_sched
 
@@ -385,6 +404,12 @@ class AtlasSession:
         # below only stops the I/O thread.
         scheduler = self._publish_scheduler() if done < len(specs) else None
         pending_commit = None
+        queue_stats: dict | None = None
+        sampler = None
+        if cfg.sample_interval_s > 0:
+            sampler = ResourceSampler(
+                interval_s=cfg.sample_interval_s, tracer=self.tracer
+            ).start()
         try:
             for l in range(done, len(specs)):
                 # discard partial output of a crashed attempt at this layer
@@ -398,6 +423,7 @@ class AtlasSession:
                 layer_spills, m, barrier_wait = self.engine.run_layer(
                     csr, in_deg, spills, specs[l], out_dir, layer_index=l,
                     scheduler=scheduler, pending_commit=pending_commit,
+                    tracer=self.tracer,
                 )
                 metrics.append(m)
                 pending_commit = self._layer_commit(
@@ -411,6 +437,10 @@ class AtlasSession:
             if pending_commit is not None:
                 pending_commit()
             if scheduler is not None:
+                # the run-wide I/O accounting, captured at its final
+                # (post-last-barrier, pre-close) state — the close below
+                # only reclaims the I/O thread
+                queue_stats = scheduler.qstats.snapshot()
                 scheduler.close(commit=False)
                 self._io_sched = None
         except BaseException:
@@ -431,12 +461,40 @@ class AtlasSession:
                 scheduler.close(commit=False, raise_error=False)
                 self._io_sched = None
             raise
+        finally:
+            if sampler is not None:
+                sampler.stop()
 
         if not layers:  # zero specs: the "final" layer is the input itself
             layers[0] = self._handle(0, spills, store.feat_dim)
-        result = RunResult(manifest=manifest, metrics=metrics, layers=layers)
+        result = RunResult(
+            manifest=manifest, metrics=metrics, layers=layers,
+            queue_stats=queue_stats,
+        )
+        result.telemetry = self._telemetry(metrics, queue_stats, sampler)
+        if self.tracer.enabled:
+            result.trace_path = self.tracer.export(
+                os.path.join(self.workdir, "trace.json")
+            )
         self._last_result = result
         return result
+
+    def _telemetry(self, metrics, queue_stats, sampler) -> dict | None:
+        """One nested snapshot of everything this run measured; ``None``
+        when neither tracing, the sampler, nor the scheduler ran."""
+        tree: dict = {}
+        if metrics:
+            tree["layers"] = [m.as_dict() for m in metrics]
+        if queue_stats is not None:
+            tree["io_queue"] = queue_stats
+        if self.tracer.enabled:
+            tree["trace"] = {
+                "num_spans": self.tracer.num_spans,
+                "category_seconds": self.tracer.category_seconds(),
+            }
+        if sampler is not None:
+            tree["resources"] = sampler.snapshot()
+        return tree or None
 
     def _layer_commit(
         self, manifest, manifest_path, l, layer_spills, barrier_wait,
@@ -619,10 +677,12 @@ class AtlasSession:
             )
             if cache is None and cache_bytes:
                 cache = ShardedPageCache(
-                    servable.num_blocks, cache_bytes, num_shards=num_shards
+                    servable.num_blocks, cache_bytes, num_shards=num_shards,
+                    tracer=self.tracer,
                 )
             r = SessionReader(
-                self, layer, e, servable, cache=cache, stats=stats
+                self, layer, e, servable, cache=cache, stats=stats,
+                tracer=self.tracer,
             )
         except BaseException:
             self._release(layer, e)

@@ -45,6 +45,7 @@ import time
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.storage.iostats import IOStats, QueueStats
 from repro.storage.spill import DEFAULT_BLOCK_ROWS, SpillFile, write_spill
 from repro.util.offload import OffloadWorker
@@ -73,7 +74,8 @@ def fsync_dir(path: str) -> bool:
 
 
 def make_scheduler(
-    impl: str, queue_depth: int = 8, stats: QueueStats | None = None
+    impl: str, queue_depth: int = 8, stats: QueueStats | None = None,
+    tracer=None,
 ) -> "WritebackIOScheduler | None":
     """``None`` for ``"sync"`` (callers fall back to inline
     ``write_spill`` with per-file fsync — today's oracle path), a
@@ -81,7 +83,9 @@ def make_scheduler(
     if impl == "sync":
         return None
     if impl == "writeback":
-        return WritebackIOScheduler(queue_depth=queue_depth, stats=stats)
+        return WritebackIOScheduler(
+            queue_depth=queue_depth, stats=stats, tracer=tracer
+        )
     raise ValueError(f"unknown io impl {impl!r} (want 'writeback'|'sync')")
 
 
@@ -124,8 +128,10 @@ class WritebackIOScheduler:
         queue_depth: int = 8,
         stats: QueueStats | None = None,
         name: str = "atlas-io",
+        tracer=None,
     ):
         self.qstats = stats if stats is not None else QueueStats(name=name)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._dirty_lock = threading.Lock()
         self._dirty_files: set[str] = set()
         self._dirty_dirs: set[str] = set()
@@ -235,29 +241,31 @@ class WritebackIOScheduler:
     def _write(self, task: _SpillTask) -> None:
         t0 = time.perf_counter()
         self.qstats.record_start(t0 - task.enqueued_at)
-        try:
-            scratch = None
-            if not task.presorted:
-                scratch = self._scratch_for(
-                    task.num_rows, task.rows.shape[1], task.rows.dtype
+        with self.tracer.span("spill_write", "spill"):
+            try:
+                scratch = None
+                if not task.presorted:
+                    scratch = self._scratch_for(
+                        task.num_rows, task.rows.shape[1], task.rows.dtype
+                    )
+                write_spill(
+                    task.path,
+                    task.ids[: task.num_rows],
+                    task.rows[: task.num_rows],
+                    stats=task.stats,
+                    presorted=task.presorted,
+                    block_rows=task.block_rows,
+                    scratch=scratch,
+                    durability="deferred",
                 )
-            write_spill(
-                task.path,
-                task.ids[: task.num_rows],
-                task.rows[: task.num_rows],
-                stats=task.stats,
-                presorted=task.presorted,
-                block_rows=task.block_rows,
-                scratch=scratch,
-                durability="deferred",
-            )
-            self.note_dirty(task.path)
-        finally:
-            # success is accounted here; an erroring task falls through to
-            # the worker's on_drop (_drop), which does the drop accounting
-            if task.recycle:
-                self._recycle(task.ids, task.rows)
-                task.recycle = False  # _drop must not double-recycle
+                self.note_dirty(task.path)
+            finally:
+                # success is accounted here; an erroring task falls through
+                # to the worker's on_drop (_drop), which does the drop
+                # accounting
+                if task.recycle:
+                    self._recycle(task.ids, task.rows)
+                    task.recycle = False  # _drop must not double-recycle
         self.qstats.record_done(task.nbytes, time.perf_counter() - t0)
 
     def _drop(self, task: _SpillTask) -> None:
@@ -285,7 +293,8 @@ class WritebackIOScheduler:
         only after the next ``barrier``.  This split is what lets the
         engine overlap the fsync group commit with the next layer's
         reads without racing them against unwritten files."""
-        self._worker.drain()
+        with self.tracer.span("queue_drain", "drain"):
+            self._worker.drain()
         self._worker.raise_pending()
 
     def barrier(self) -> float:
@@ -293,24 +302,29 @@ class WritebackIOScheduler:
         then fsync every dirty file and containing directory once.
         Returns the seconds this call blocked — the only durability cost
         left on the caller's critical path."""
-        t0 = time.perf_counter()
-        self._worker.drain()
-        # consumer death / write failure surfaces here, never silently
-        self._worker.raise_pending()
-        with self._dirty_lock:
-            files = sorted(self._dirty_files)
-            dirs = sorted(self._dirty_dirs)
-            self._dirty_files.clear()
-            self._dirty_dirs.clear()
-        n_sync = 0
-        for p in files:
-            with open(p, "rb") as f:
-                os.fsync(f.fileno())
-            n_sync += 1
-        for d in dirs:
-            if fsync_dir(d):
-                n_sync += 1
-        seconds = time.perf_counter() - t0
+        self.tracer.begin("group_commit", "barrier")
+        try:
+            t0 = time.perf_counter()
+            self._worker.drain()
+            # consumer death / write failure surfaces here, never silently
+            self._worker.raise_pending()
+            with self._dirty_lock:
+                files = sorted(self._dirty_files)
+                dirs = sorted(self._dirty_dirs)
+                self._dirty_files.clear()
+                self._dirty_dirs.clear()
+            n_sync = 0
+            with self.tracer.span("fsync_pass", "fsync"):
+                for p in files:
+                    with open(p, "rb") as f:
+                        os.fsync(f.fileno())
+                    n_sync += 1
+                for d in dirs:
+                    if fsync_dir(d):
+                        n_sync += 1
+            seconds = time.perf_counter() - t0
+        finally:
+            self.tracer.end("group_commit", "barrier")
         self._barrier_s += seconds
         self.qstats.record_barrier(seconds, n_sync)
         return seconds

@@ -20,6 +20,7 @@ import threading
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.obs.trace import NULL_TRACER
 from repro.storage.iostats import IOStats
 from repro.storage.spill import SpillSet
 
@@ -61,12 +62,14 @@ class ChunkReader:
         stats: IOStats | None = None,
         prefetch_depth: int = 4,
         num_vertices: int | None = None,
+        tracer=None,
     ):
         self.csr = csr
         self.spills = spills
         self.feat_dim = feat_dim
         self.feat_dtype = np.dtype(feat_dtype)
         self.stats = stats if stats is not None else IOStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.prefetch_depth = prefetch_depth
         self.num_vertices = num_vertices or csr.num_vertices
         row_bytes = self.feat_dim * self.feat_dtype.itemsize
@@ -146,11 +149,14 @@ class ChunkReader:
             return False
 
         def worker():
+            tr = self.tracer
             try:
                 for i, (s, e) in enumerate(ranges):
                     if stop.is_set():
                         return
-                    if not put_checked(self._read_chunk_with_retry(i, s, e)):
+                    with tr.span("read_chunk", "read"):
+                        chunk = self._read_chunk_with_retry(i, s, e)
+                    if not put_checked(chunk):
                         return
             except BaseException as exc:  # propagate to consumer
                 error.append(exc)
@@ -175,4 +181,6 @@ class ChunkReader:
     def read_serial(self):
         """Non-threaded variant (deterministic single-thread debugging)."""
         for i, (s, e) in enumerate(self.chunk_ranges()):
-            yield self._read_chunk(i, s, e)
+            with self.tracer.span("read_chunk", "read"):
+                chunk = self._read_chunk(i, s, e)
+            yield chunk

@@ -45,6 +45,7 @@ import time
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.util.offload import OffloadWorker
 from repro.graphs.partition import RangePartition
 from repro.storage.iostats import IOStats
@@ -65,6 +66,7 @@ class EmbeddingWriter:
         threaded: bool = True,
         ingest_impl: str = "array",
         scheduler=None,
+        tracer=None,
     ):
         self.out_dir = out_dir
         os.makedirs(out_dir, exist_ok=True)
@@ -73,6 +75,7 @@ class EmbeddingWriter:
         self.dtype = np.dtype(dtype)
         self.buffer_rows = max(1, buffer_rows)
         self.stats = stats if stats is not None else IOStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.spills = SpillSet()
         self.scheduler = scheduler  # borrowed: the owner barriers/closes it
         if ingest_impl not in ("array", "python"):
@@ -129,10 +132,11 @@ class EmbeddingWriter:
 
     # ------------------------------------------------------------- ingest
     def _ingest(self, ids: np.ndarray, rows: np.ndarray) -> None:
-        if self.ingest_impl == "array":
-            self._ingest_array(ids, rows)
-        else:
-            self._ingest_python(ids, rows)
+        with self.tracer.span("writer_ingest", "tail"):
+            if self.ingest_impl == "array":
+                self._ingest_array(ids, rows)
+            else:
+                self._ingest_python(ids, rows)
 
     def _ingest_array(self, ids: np.ndarray, rows: np.ndarray) -> None:
         """Split one batch into per-partition runs in a single argsort pass
@@ -205,34 +209,40 @@ class EmbeddingWriter:
             self._seq += 1
         path = os.path.join(self.out_dir, f"spill_p{p:04d}_{seq:06d}.spill")
         t1 = time.perf_counter()
-        w0 = time.perf_counter()
-        if self.scheduler is not None:
-            if self.ingest_impl == "array":
-                # hand the whole arena over (the I/O thread sorts and
-                # writes from it, then recycles it) and lease a
-                # replacement: the flush never blocks on disk
-                sf = self.scheduler.submit_spill(
-                    path,
-                    self._arena_ids[p],
-                    self._arena_rows[p],
-                    num_rows=n,
-                    stats=self.stats,
-                    recycle=True,
-                )
-                self._arena_ids[p], self._arena_rows[p] = (
-                    self.scheduler.lease_arena(
-                        self.buffer_rows, self.dim, self.dtype
+        self.tracer.begin("spill_flush", "spill")
+        try:
+            w0 = time.perf_counter()
+            if self.scheduler is not None:
+                if self.ingest_impl == "array":
+                    # hand the whole arena over (the I/O thread sorts and
+                    # writes from it, then recycles it) and lease a
+                    # replacement: the flush never blocks on disk
+                    sf = self.scheduler.submit_spill(
+                        path,
+                        self._arena_ids[p],
+                        self._arena_rows[p],
+                        num_rows=n,
+                        stats=self.stats,
+                        recycle=True,
                     )
-                )
+                    self._arena_ids[p], self._arena_rows[p] = (
+                        self.scheduler.lease_arena(
+                            self.buffer_rows, self.dim, self.dtype
+                        )
+                    )
+                else:
+                    # python oracle buffers are freshly concatenated arrays:
+                    # hand them over by reference, nothing to recycle
+                    sf = self.scheduler.submit_spill(
+                        path, ids, rows, stats=self.stats
+                    )
             else:
-                # python oracle buffers are freshly concatenated arrays:
-                # hand them over by reference, nothing to recycle
-                sf = self.scheduler.submit_spill(
-                    path, ids, rows, stats=self.stats
+                sf = write_spill(
+                    path, ids, rows, stats=self.stats, scratch=scratch
                 )
-        else:
-            sf = write_spill(path, ids, rows, stats=self.stats, scratch=scratch)
-        w1 = time.perf_counter()
+            w1 = time.perf_counter()
+        finally:
+            self.tracer.end("spill_flush", "spill")
         with self._lock:
             self.spills.add(sf)
             self._rows_written += sf.num_rows
