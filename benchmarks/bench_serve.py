@@ -14,6 +14,16 @@ re-publishes the layer in a loop with alternating row contents; every
 batch is checked bit-for-bit against the reader's pinned version, so any
 mixed-version or missing row fails the run.
 
+``--orderings og,rnd,at`` switches to the layout-sensitivity mode: one
+real graph store per ordering (``GraphStore.create(order=...)``), the
+store's layer-0 rows published as the servable layer, and a *popularity*
+workload (Zipf over the in-degree ranking, i.e. hubs are hot) replayed
+against each store **by external id** — the reader translates through
+the permutation sidecar, so all three stores serve bit-identical rows
+and only the physical layout differs.  Reports the page-cache hit rate
+per ordering: the paper's greedy order packs hubs into few blocks, so
+its hit rate should lead under a small cache.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_serve.py                # 1M rows
     PYTHONPATH=src python benchmarks/bench_serve.py --vertices 200000 \
@@ -38,6 +48,7 @@ import time
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.synth import make_features, powerlaw_graph
 from repro.obs.metrics import Histogram
 from repro.session import AtlasSession
 from repro.storage.iostats import IOStats
@@ -264,6 +275,47 @@ def run_concurrent(
     return rec
 
 
+# --------------------------------------------------------------------------
+# Ordering mode (ISSUE 8): same rows, same external-id workload, three
+# physical layouts — how much page-cache hit rate does the store ordering
+# buy on a hub-heavy (popularity-Zipf) serving workload?
+# --------------------------------------------------------------------------
+
+
+def run_orderings(td: str, args) -> list[dict]:
+    csr = powerlaw_graph(args.vertices, args.degree, seed=args.seed)
+    feats = make_features(args.vertices, args.dim, seed=args.seed + 1)
+    # popularity follows citation count: rank vertices by in-degree and
+    # draw Zipf ranks, so the hot set is the graph's hub set
+    indeg = np.bincount(np.asarray(csr.indices), minlength=csr.num_vertices)
+    by_pop = np.argsort(-indeg, kind="stable")
+    rng = np.random.default_rng(args.seed + 2)
+    ranks = (rng.zipf(args.zipf_alpha,
+                      size=(args.batches + args.warm_batches, args.batch)) - 1)
+    queries = by_pop[ranks % args.vertices]  # external ids, hub-hot
+    cache_bytes = int(args.cache_mb_ordering * (1 << 20))
+    rows = []
+    for ordering in args.orderings.split(","):
+        root = os.path.join(td, f"ord_{ordering}")
+        store = GraphStore.create(
+            os.path.join(root, "store"), csr, feats, num_partitions=4,
+            order=ordering, order_seed=args.seed,
+        )
+        with AtlasSession(store, workdir=os.path.join(root, "run")) as session:
+            session.publish(SERVE_LAYER, spills=store.layer0_spills(),
+                            block_rows=args.block_rows,
+                            rows_per_file=args.rows_per_file)
+            rec = run_workload(session, queries, cache_bytes,
+                               args.shards, args.warm_batches)
+        rec = {"ordering": store.ordering_name, **rec}
+        rows.append(rec)
+        print(f"  order={store.ordering_name:<8} cache={args.cache_mb_ordering:5.1f}MiB  "
+              f"hit_rate={rec.get('hit_rate', 0.0):<7} "
+              f"blocks_read={rec['disk_blocks_read']:<8d} "
+              f"{rec['queries_per_s']:>10.1f} q/s")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--vertices", type=int, default=1_000_000)
@@ -291,6 +343,15 @@ def main():
                     help="per-reader cache budget in --concurrent mode")
     ap.add_argument("--drain-seconds", type=float, default=1.0,
                     help="reader time against the final version before stop")
+    ap.add_argument("--orderings", default="", metavar="OG,RND,AT",
+                    help="layout mode: comma-separated store orderings to "
+                         "compare under a popularity workload (skips the "
+                         "cache sweep)")
+    ap.add_argument("--degree", type=int, default=12,
+                    help="avg degree of the graph in --orderings mode")
+    ap.add_argument("--cache-mb-ordering", type=float, default=4.0,
+                    help="page-cache budget in --orderings mode (small, so "
+                         "layout matters)")
     ap.add_argument("--json", default=None, help="write results to this path")
     args = ap.parse_args()
 
@@ -303,6 +364,16 @@ def main():
         }
     }
     with tempfile.TemporaryDirectory() as td:
+        if args.orderings:
+            print(f"ordering mode: V={args.vertices} d={args.dim} "
+                  f"deg={args.degree} orderings={args.orderings} "
+                  f"cache={args.cache_mb_ordering}MiB")
+            results["orderings"] = run_orderings(td, args)
+            if args.json:
+                with open(args.json, "w") as f:
+                    json.dump(results, f, indent=2)
+                print(f"wrote {args.json}")
+            return
         session = make_session(td, args.vertices)
         if args.concurrent > 0:
             print(f"concurrent smoke: V={args.vertices} d={args.dim} "

@@ -27,9 +27,14 @@ def bench_graph(v=20_000, deg=12, d=64, seed=7, self_loops=True):
     return csr, feats
 
 
-def run_atlas(tmpdir, csr, feats, specs, cfg: AtlasConfig):
+def run_atlas(tmpdir, csr, feats, specs, cfg: AtlasConfig,
+              order="original", order_seed=0):
+    """Build a store (optionally reordered at build time — csr/feats stay
+    in the caller's original namespace) and run one inference pass.
+    Returned dense output rows are in the store's *internal* order."""
     store = GraphStore.create(
-        os.path.join(tmpdir, "store"), csr, feats, num_partitions=cfg.num_partitions
+        os.path.join(tmpdir, "store"), csr, feats,
+        num_partitions=cfg.num_partitions, order=order, order_seed=order_seed,
     )
     t0 = time.perf_counter()
     session = AtlasSession(store, config=cfg, workdir=os.path.join(tmpdir, "work"))

@@ -10,14 +10,11 @@ import tempfile
 
 from benchmarks.common import bench_graph, gnn_specs, run_atlas, save
 from repro.core.atlas import AtlasConfig
-from repro.core.reorder import make_order, relabel_features_chunked, relabel_graph
 
 
 def run(v=20_000, deg=12, d=64, hot_frac=10):
+    # AT ordering applied at store build; inputs stay in original ids
     csr, feats = bench_graph(v=v, deg=deg, d=d)
-    order = make_order("at", csr)
-    csr_r = relabel_graph(csr, order)
-    feats_r = relabel_features_chunked(feats, order)
     specs = gnn_specs("gcn", d)
     rows = []
     for policy in ("rnd", "lru", "at"):
@@ -25,7 +22,7 @@ def run(v=20_000, deg=12, d=64, hot_frac=10):
             chunk_bytes=512 * d * 4, hot_slots=v // hot_frac, eviction=policy
         )
         with tempfile.TemporaryDirectory() as td:
-            _, metrics, wall = run_atlas(td, csr_r, feats_r, specs, cfg)
+            _, metrics, wall = run_atlas(td, csr, feats, specs, cfg, order="at")
         m0 = metrics[0]
         rows.append({
             "policy": policy, "wall_s": wall, "reloads": m0.reloads,

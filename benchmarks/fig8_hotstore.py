@@ -3,41 +3,67 @@
 Sweep the hot-store size; reloads drop to ~0 beyond a threshold and
 runtime stabilizes — the paper's 'once the hot store is large enough to
 avoid evictions, performance stabilizes'.
+
+Ordering happens at store build (``GraphStore.create(order="at")``);
+one store per budget point keeps runs independent.  Features go through
+an on-disk memmap above ``--mmap-threshold`` vertices so the sweep runs
+at V>=1M.
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import tempfile
 
-from benchmarks.common import bench_graph, gnn_specs, run_atlas, save
+from benchmarks.common import gnn_specs, run_atlas, save
 from repro.core.atlas import AtlasConfig
-from repro.core.reorder import make_order, relabel_features_chunked, relabel_graph
+from repro.graphs.synth import make_features, make_features_mmap, powerlaw_graph
 
 
-def run(v=20_000, deg=12, d=64, fracs=(40, 20, 10, 5, 3, 2, 1)):
-    csr, feats = bench_graph(v=v, deg=deg, d=d)
-    order = make_order("at", csr)
-    csr_r = relabel_graph(csr, order)
-    feats_r = relabel_features_chunked(feats, order)
+def run(v=20_000, deg=12, d=64, fracs=(40, 20, 10, 5, 3, 2, 1),
+        mmap_threshold=200_000):
+    csr = powerlaw_graph(v, deg, seed=7)
     specs = gnn_specs("gcn", d)
     rows = []
-    for frac in fracs:
-        slots = max(64, v // frac)
-        cfg = AtlasConfig(chunk_bytes=512 * d * 4, hot_slots=slots, eviction="at")
-        with tempfile.TemporaryDirectory() as td:
-            _, metrics, wall = run_atlas(td, csr_r, feats_r, specs, cfg)
-        m0 = metrics[0]
-        rows.append({
-            "hot_slots": slots, "wall_s": wall, "reloads": m0.reloads,
-            "evictions": m0.evictions,
-            "peak_cold": m0.peak_cold_resident,
-        })
-        print(f"[fig8] slots={slots:7d}: reloads={m0.reloads:7d} "
-              f"peak_cold={m0.peak_cold_resident:7d} wall={wall:.1f}s")
+    with tempfile.TemporaryDirectory() as scratch:
+        if v >= mmap_threshold:
+            feats = make_features_mmap(v, d, os.path.join(scratch, "feats.npy"),
+                                       seed=8)
+        else:
+            feats = make_features(v, d, seed=8)
+        for frac in fracs:
+            slots = max(64, v // frac)
+            cfg = AtlasConfig(chunk_bytes=512 * d * 4, hot_slots=slots,
+                              eviction="at")
+            with tempfile.TemporaryDirectory() as td:
+                _, metrics, wall = run_atlas(td, csr, feats, specs, cfg,
+                                             order="at")
+            m0 = metrics[0]
+            rows.append({
+                "hot_slots": slots, "wall_s": wall, "reloads": m0.reloads,
+                "evictions": m0.evictions,
+                "peak_cold": m0.peak_cold_resident,
+            })
+            print(f"[fig8] slots={slots:7d}: reloads={m0.reloads:7d} "
+                  f"peak_cold={m0.peak_cold_resident:7d} wall={wall:.1f}s")
     save("fig8_hotstore", rows)
     assert rows[-1]["reloads"] == 0, "largest budget must eliminate reloads"
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vertices", type=int, default=20_000)
+    ap.add_argument("--degree", type=int, default=12)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--fracs", nargs="+", type=int,
+                    default=[40, 20, 10, 5, 3, 2, 1])
+    ap.add_argument("--mmap-threshold", type=int, default=200_000)
+    args = ap.parse_args()
+    run(v=args.vertices, deg=args.degree, d=args.dim,
+        fracs=tuple(args.fracs), mmap_threshold=args.mmap_threshold)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,4 +1,4 @@
-"""ATLAS graph reordering (paper §3.8).
+"""ATLAS graph reordering (paper §3.8) and the vertex ID namespace.
 
 Greedy single-pass heuristic: process vertices in decreasing
 
@@ -10,32 +10,115 @@ touches).  The new ordering maximises completion rate while bounding the
 number of simultaneously-partial vertices, which empirically cuts vertex
 span ~3× and reloads ~6× (paper Fig 6).
 
-The relabel pass then rewrites topology and streams features old-ID-order →
-new-ID-partitioned sorted spill files, exactly the runtime writer's layout.
+Namespace vocabulary used everywhere downstream (``GraphStore``,
+``AtlasSession``, ``VertexQueryEngine``):
+
+* **external id** — the caller's original vertex numbering (what the
+  dataset, the launcher, and serving requests speak).
+* **internal id** — storage order: the position a vertex's topology row
+  and feature row actually occupy on disk after reordering.
+
+An ordering is a permutation ``order`` with ``order[rank] = external_id``
+(rank = internal id): ``order`` *is* the ``old_of_new`` sidecar, and
+``relabel_map(order)`` is its inverse ``new_of_old`` (external →
+internal).  ``permutation_digest`` fingerprints a permutation so stores
+and run manifests can detect that they disagree about the namespace.
 """
 
 from __future__ import annotations
+
+import hashlib
+from typing import Iterator
 
 import numpy as np
 
 from repro.graphs.csr import CSRGraph, build_csr, degrees_from_csr
 
+#: canonical ordering names recorded in store manifests
+ORDER_NAMES = ("original", "random", "atlas", "custom")
 
-def atlas_order(csr: CSRGraph) -> np.ndarray:
+_ALIASES = {
+    "at": "atlas", "atlas": "atlas",
+    "rnd": "random", "random": "random",
+    "og": "original", "original": "original", "none": "original",
+}
+
+_DIGEST_CHUNK = 1 << 20  # rows hashed per block (8 MiB of int64)
+
+
+def canonical_order_name(name: str) -> str:
+    """Map an ordering alias (``og``/``rnd``/``at``/...) to its canonical
+    manifest name."""
+    try:
+        return _ALIASES[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown ordering {name!r} (known: {sorted(_ALIASES)})"
+        ) from None
+
+
+def _gain_add_at(csr: CSRGraph, inv_in: np.ndarray) -> np.ndarray:
+    """Reference segment sum (the original path): scatter-add each edge's
+    1/d_in(dst) onto its source.  O(E) scalar scatter — kept as the
+    bit-equality oracle for ``_gain_reduceat``."""
+    gain = np.zeros(csr.num_vertices, dtype=np.float64)
+    dst_inv = inv_in[np.asarray(csr.indices)]
+    np.add.at(
+        gain, np.repeat(np.arange(csr.num_vertices), np.diff(csr.indptr)), dst_inv
+    )
+    return gain
+
+
+def _gain_reduceat(csr: CSRGraph, inv_in: np.ndarray) -> np.ndarray:
+    """Vectorised segment sum over CSR ``indptr`` segments.
+
+    Out-edges are contiguous per source, so the per-source sums are one
+    ``np.add.reduceat`` over the segment starts.  Empty segments need
+    guarding — ``reduceat`` at a repeated index returns the *element*
+    there, not zero — so only non-empty sources are reduced; consecutive
+    selected starts still bound exact segments because empty sources
+    contribute no gap in ``indptr``.
+
+    Numerics: ``reduceat`` sums segments pairwise while ``_gain_add_at``
+    accumulates sequentially, so on arbitrary float input the two can
+    differ in the last ulp.  When every summand is exactly representable
+    with headroom — e.g. in-degrees that are powers of two, so each
+    1/d_in is a power of two — both reduction orders are exact and the
+    paths agree bit-for-bit (that invariant is what the regression test
+    pins); on general graphs the resulting *scores* agree to ~1 ulp.
+    """
+    indptr = np.asarray(csr.indptr)
+    gain = np.zeros(csr.num_vertices, dtype=np.float64)
+    if csr.num_edges == 0:
+        return gain
+    dst_inv = inv_in[np.asarray(csr.indices)]
+    starts = indptr[:-1]
+    nonempty = starts < indptr[1:]
+    gain[nonempty] = np.add.reduceat(dst_inv, starts[nonempty])
+    return gain
+
+
+def atlas_order(csr: CSRGraph, gain_impl: str = "reduceat") -> np.ndarray:
     """Return `order` such that order[rank] = old_vertex_id (rank 0 first).
 
     Single pass over topology: Score needs only degrees and one segment
-    sum over out-edges.
+    sum over out-edges.  ``gain_impl`` selects the segment-sum kernel:
+    ``"reduceat"`` (vectorised; ~1.5× faster at V=1M/E=12M on numpy 2's
+    fast indexed-at loop, and it skips the E×8B ``np.repeat`` scratch
+    the scatter path allocates) or ``"add_at"`` (the original scatter
+    path, kept as the equality oracle).
     """
     in_deg, out_deg = degrees_from_csr(csr)
     inv_in = np.zeros(csr.num_vertices, dtype=np.float64)
     nz = in_deg > 0
     inv_in[nz] = 1.0 / in_deg[nz]
     # numerator: sum of 1/d_in(dst) over each vertex's out-edges
-    gain = np.zeros(csr.num_vertices, dtype=np.float64)
-    dst_inv = inv_in[np.asarray(csr.indices)]
-    # segment-sum by source: out-edges are contiguous per source in CSR
-    np.add.at(gain, np.repeat(np.arange(csr.num_vertices), np.diff(csr.indptr)), dst_inv)
+    if gain_impl == "reduceat":
+        gain = _gain_reduceat(csr, inv_in)
+    elif gain_impl == "add_at":
+        gain = _gain_add_at(csr, inv_in)
+    else:
+        raise ValueError(f"unknown gain_impl {gain_impl!r}")
     score = np.where(out_deg > 0, gain / np.maximum(out_deg, 1), 0.0)
     # stable descending sort; zero-out-degree sinks go last (they emit
     # nothing, so placing them early wastes hot-store residency)
@@ -51,10 +134,57 @@ def original_order(num_vertices: int) -> np.ndarray:
 
 
 def relabel_map(order: np.ndarray) -> np.ndarray:
-    """new_id_of[old_id] given order[rank] = old_id."""
+    """new_id_of[old_id] given order[rank] = old_id (the inverse
+    permutation; applying it twice returns ``order``)."""
     new_of = np.empty_like(order)
     new_of[order] = np.arange(len(order), dtype=order.dtype)
     return new_of
+
+
+def validate_permutation(order: np.ndarray, num_vertices: int) -> np.ndarray:
+    """Check that ``order`` is a permutation of [0, num_vertices) and
+    return it as int64."""
+    order = np.asarray(order)
+    if order.ndim != 1 or len(order) != num_vertices:
+        raise ValueError(
+            f"ordering must be a length-{num_vertices} permutation, "
+            f"got shape {order.shape}"
+        )
+    order = order.astype(np.int64, copy=False)
+    seen = np.zeros(num_vertices, dtype=bool)
+    if len(order) and (order.min() < 0 or order.max() >= num_vertices):
+        raise ValueError("ordering has out-of-range vertex ids")
+    seen[order] = True
+    if not seen.all():
+        raise ValueError("ordering is not a permutation (repeated ids)")
+    return order
+
+
+def permutation_digest(
+    order: np.ndarray | None, num_vertices: int | None = None
+) -> str:
+    """Stable fingerprint of a vertex permutation (sha256 over the int64
+    ``old_of_new`` bytes, hashed in bounded chunks so multi-M-vertex
+    sidecars and memmaps never materialise).  ``order=None`` digests the
+    identity permutation of ``num_vertices`` — the same value an
+    explicit ``arange`` would produce, so "original" stores and custom
+    identity orders agree."""
+    h = hashlib.sha256()
+    if order is None:
+        if num_vertices is None:
+            raise ValueError("permutation_digest(None) needs num_vertices")
+        for s in range(0, num_vertices, _DIGEST_CHUNK):
+            e = min(s + _DIGEST_CHUNK, num_vertices)
+            h.update(np.arange(s, e, dtype="<i8").tobytes())
+    else:
+        order = np.asarray(order)
+        for s in range(0, len(order), _DIGEST_CHUNK):
+            h.update(
+                np.ascontiguousarray(
+                    order[s : s + _DIGEST_CHUNK], dtype="<i8"
+                ).tobytes()
+            )
+    return h.hexdigest()[:16]
 
 
 def relabel_graph(csr: CSRGraph, order: np.ndarray) -> CSRGraph:
@@ -64,26 +194,43 @@ def relabel_graph(csr: CSRGraph, order: np.ndarray) -> CSRGraph:
     return build_csr(new_of[src], new_of[dst], csr.num_vertices)
 
 
+def iter_relabeled_feature_chunks(
+    features: np.ndarray, order: np.ndarray, chunk_rows: int = 65536
+) -> Iterator[np.ndarray]:
+    """Yield ``[n, d]`` feature row chunks in new-ID (internal) order:
+    chunk k holds rows ``features[order[k*chunk_rows : ...]]``.
+
+    The source must be randomly addressable (an ndarray or an on-disk
+    memmap, e.g. ``make_features_mmap``); each gather materialises only
+    one chunk, so a store build streams a larger-than-RAM feature matrix
+    into the reordered partitioned layout with bounded memory.
+    """
+    chunk_rows = max(1, int(chunk_rows))
+    for s in range(0, len(order), chunk_rows):
+        yield np.asarray(features[order[s : s + chunk_rows]])
+
+
 def relabel_features_chunked(
     features: np.ndarray, order: np.ndarray, chunk_rows: int = 65536
 ) -> np.ndarray:
-    """Features in new-ID order, processed in chunks (paper relabels the
-    on-disk feature matrix streamingly; for in-memory arrays this is a
-    gather, chunked to bound the temporary working set)."""
-    out = np.empty_like(features)
-    new_of = relabel_map(order)
-    for s in range(0, len(features), chunk_rows):
-        e = min(s + chunk_rows, len(features))
-        out[new_of[s:e]] = features[s:e]
+    """Features in new-ID order (``features[order]``), gathered in chunks
+    to bound the temporary working set; bit-identical to a dense
+    ``np.take`` (enforced by tests).  The streaming store build uses the
+    underlying ``iter_relabeled_feature_chunks`` directly."""
+    out = np.empty_like(features, subok=False)
+    s = 0
+    for chunk in iter_relabeled_feature_chunks(features, order, chunk_rows):
+        out[s : s + len(chunk)] = chunk
+        s += len(chunk)
     return out
 
 
 def make_order(name: str, csr: CSRGraph, seed: int = 0) -> np.ndarray:
-    name = name.lower()
-    if name in ("at", "atlas"):
+    name = canonical_order_name(name)
+    if name == "atlas":
         return atlas_order(csr)
-    if name in ("rnd", "random"):
+    if name == "random":
         return random_order(csr.num_vertices, seed)
-    if name in ("og", "original", "none"):
+    if name == "original":
         return original_order(csr.num_vertices)
     raise ValueError(f"unknown ordering {name!r}")

@@ -20,6 +20,19 @@ free: either no file/block id-range covers the id (no I/O at all), or
 the file's id column has a gap where the id would sort, caught before
 any block is fetched.
 
+Vertex ID namespace: a store built with ``GraphStore.create(order=...)``
+stores rows under *internal* (storage-order) ids while callers speak
+*external* (original) ids.  Pass ``id_map`` (the store's mmapped
+``new_of_old`` sidecar, external → internal) and requests are translated
+up front — one bounds check plus one fancy-index gather against the mmap
+— before the existing searchsorted path, so published embeddings stay
+queryable by the caller's ids regardless of physical layout.  With
+``id_map=None`` (unordered stores) translation is identity-free: the
+request array is used as-is.  ``id_unmap`` (``old_of_new``) is only
+consulted on the error path, to name missing ids in the caller's
+namespace.  ``repro.session.AtlasSession.reader`` wires both
+automatically.
+
 Threading model: the shared tier is the (lock-sharded) page cache; a
 ``VertexQueryEngine`` is a cheap per-thread view — instantiate one per
 query thread over the same ``ServableLayer`` and cache.  A single engine
@@ -46,12 +59,19 @@ class VertexQueryEngine:
         stats: IOStats | None = None,
         coalesce: bool = True,
         tracer=None,
+        id_map: np.ndarray | None = None,
+        id_unmap: np.ndarray | None = None,
     ):
         self.layer = layer
         self.cache = cache
         self.stats = stats if stats is not None else IOStats()
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.coalesce = coalesce  # span-read + single-gather fast path
+        # external -> internal id translation (None = identity namespace);
+        # id_unmap is the inverse, used only to report missing ids in the
+        # caller's namespace
+        self.id_map = id_map
+        self.id_unmap = id_unmap
         self.queries = 0
         self.rows_served = 0
         self.blocks_read = 0  # cumulative disk block fetches
@@ -75,6 +95,13 @@ class VertexQueryEngine:
         self.last_blocks_read = 0
         if len(q) == 0:
             return np.empty((0, self.layer.dim), dtype=self.layer.dtype)
+        if self.id_map is not None:
+            # external -> internal: translation preserves positions, so
+            # everything downstream (dedup, inverse gather) is unchanged
+            oob = q >= np.uint64(len(self.id_map))
+            if np.any(oob):
+                self._raise_missing(np.unique(q[oob]), external=True)
+            q = np.asarray(self.id_map[q], dtype=np.uint64)
         uids, inv = np.unique(q, return_inverse=True)
         f, gkey = self.layer.locate(uids)
         if np.any(gkey < 0):
@@ -175,8 +202,10 @@ class VertexQueryEngine:
                     n = idx.rows_in_block(b0 + (j - j0))
                     blocks[j] = (no_ids, span[off : off + n].copy())
 
-    @staticmethod
-    def _raise_missing(ids: np.ndarray) -> None:
+    def _raise_missing(self, ids: np.ndarray, external: bool = False) -> None:
+        if not external and self.id_unmap is not None:
+            # report internal misses in the caller's (external) namespace
+            ids = np.sort(np.asarray(self.id_unmap[ids]))
         sample = ", ".join(str(int(i)) for i in ids[:8])
         raise KeyError(
             f"{len(ids)} vertex id(s) not present in servable layer "
@@ -187,6 +216,7 @@ class VertexQueryEngine:
     def snapshot(self) -> dict:
         rec = {
             "queries": self.queries,
+            "external_ids": self.id_map is not None,
             "rows_served": self.rows_served,
             "blocks_read": self.blocks_read,
             "span_reads": self.span_reads,

@@ -63,12 +63,13 @@ from repro.storage.iostats import IOStats
 from repro.storage.layout import GraphStore
 from repro.storage.spill import DEFAULT_BLOCK_ROWS, SpillFile, SpillSet
 
-RUN_MANIFEST_SCHEMA_VERSION = 2
+RUN_MANIFEST_SCHEMA_VERSION = 3
 
 
 class StaleManifestError(RuntimeError):
     """A run manifest that cannot be resumed: wrong schema version, a
-    different store, or spill files that no longer exist."""
+    different store (vertex count or ordering/permutation digest), or
+    spill files that no longer exist."""
 
 
 # --------------------------------------------------------------------------
@@ -90,6 +91,10 @@ class RunManifest:
     layer_dims: list[int] = dataclasses.field(default_factory=list)  # out_dim per spec
     completed_layers: int = 0
     spills: dict[int, list[str]] = dataclasses.field(default_factory=dict)
+    # the store's vertex ID namespace at run time: spill ids are internal
+    # (storage-order) ids, so a resumed run must see the same permutation
+    store_ordering: str = "original"
+    store_digest: str = ""
     schema_version: int = RUN_MANIFEST_SCHEMA_VERSION
 
     def save(self, path: str) -> None:
@@ -100,6 +105,8 @@ class RunManifest:
             "layer_dims": list(self.layer_dims),
             "completed_layers": self.completed_layers,
             "spills": {str(k): v for k, v in self.spills.items()},
+            "store_ordering": self.store_ordering,
+            "store_digest": self.store_digest,
         }
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
@@ -131,6 +138,8 @@ class RunManifest:
                 spills={
                     int(k): list(v) for k, v in data.get("spills", {}).items()
                 },
+                store_ordering=str(data["store_ordering"]),
+                store_digest=str(data["store_digest"]),
                 schema_version=int(ver),
             )
         except (KeyError, TypeError, ValueError) as e:
@@ -139,14 +148,32 @@ class RunManifest:
             ) from e
 
     def validate_resume(
-        self, path: str, num_vertices: int, layer_dims: list[int]
+        self,
+        path: str,
+        num_vertices: int,
+        layer_dims: list[int],
+        store_ordering: str | None = None,
+        store_digest: str | None = None,
     ) -> None:
         """Fail fast — before any layer work — if this manifest does not
-        belong to (store, specs) or its recorded spill files are gone."""
+        belong to (store, specs), the store's vertex namespace changed
+        under it, or its recorded spill files are gone."""
         if self.num_vertices != num_vertices:
             raise StaleManifestError(
                 f"{path}: stale/foreign run manifest (records "
                 f"{self.num_vertices} vertices, store has {num_vertices})"
+            )
+        if store_digest is not None and self.store_digest != store_digest:
+            # spill ids are internal ids under the recorded permutation —
+            # replaying them against a reordered store would silently
+            # serve every row under the wrong vertex
+            raise StaleManifestError(
+                f"{path}: stale/foreign run manifest (permutation digest "
+                f"mismatch: run recorded ordering "
+                f"{self.store_ordering!r} digest {self.store_digest}, store "
+                f"now has {store_ordering!r} digest {store_digest}; the "
+                f"store was rebuilt under a different vertex order — delete "
+                f"the workdir or rerun without resume)"
             )
         if self.layer_dims != list(layer_dims):
             raise StaleManifestError(
@@ -238,6 +265,12 @@ class SessionReader(VertexQueryEngine):
     The pin (a per-session refcount) keeps the version's files on disk
     across re-publishes; ``close`` releases it, after which the version is
     collectable on the next publish.  Use as a context manager.
+
+    Lookups take **external** (original) vertex ids: when the store was
+    built with a non-identity ordering the session passes the mmapped
+    ``new_of_old`` sidecar as ``id_map`` and every request is translated
+    to internal storage ids up front — so the same caller ids return the
+    same rows no matter how the store is physically laid out.
     """
 
     def __init__(
@@ -249,8 +282,13 @@ class SessionReader(VertexQueryEngine):
         cache: ShardedPageCache | None = None,
         stats: IOStats | None = None,
         tracer=None,
+        id_map=None,
+        id_unmap=None,
     ):
-        super().__init__(servable, cache=cache, stats=stats, tracer=tracer)
+        super().__init__(
+            servable, cache=cache, stats=stats, tracer=tracer,
+            id_map=id_map, id_unmap=id_unmap,
+        )
         self._session = session
         self.layer_index = layer_index
         self.version = epoch
@@ -370,10 +408,18 @@ class AtlasSession:
             num_vertices=store.num_vertices,
             num_layers=len(specs),
             layer_dims=dims,
+            store_ordering=store.ordering_name,
+            store_digest=store.ordering_digest,
         )
         if resume and os.path.exists(manifest_path):
             manifest = RunManifest.load(manifest_path)
-            manifest.validate_resume(manifest_path, store.num_vertices, dims)
+            manifest.validate_resume(
+                manifest_path,
+                store.num_vertices,
+                dims,
+                store_ordering=store.ordering_name,
+                store_digest=store.ordering_digest,
+            )
 
         csr = store.topology()
         in_deg, _ = degrees_from_csr(csr)
@@ -659,6 +705,8 @@ class AtlasSession:
         """A query engine pinned to the version of ``layer`` current at
         this call (or an explicit still-on-disk ``epoch``).  The pinned
         version survives re-publishes until the reader is closed.
+        Lookups take external (original) vertex ids; reordered stores
+        translate through their permutation sidecar transparently.
 
         ``cache_bytes`` builds a fresh per-reader ``ShardedPageCache``;
         pass ``cache`` only to share one across readers of the *same*
@@ -683,6 +731,10 @@ class AtlasSession:
             r = SessionReader(
                 self, layer, e, servable, cache=cache, stats=stats,
                 tracer=self.tracer,
+                # non-identity stores serve by external id: translate
+                # through the permutation sidecars (both None otherwise)
+                id_map=self.store.new_of_old(),
+                id_unmap=self.store.old_of_new(),
             )
         except BaseException:
             self._release(layer, e)

@@ -1,4 +1,4 @@
-"""On-disk graph store (paper §3.2).
+"""On-disk graph store (paper §3.2) and the vertex ID namespace boundary.
 
 Topology: CSR (`indptr.npy`, `indices.npy`), memory-mapped — O(V+E) on disk,
 sequential offset-based access for the reader.
@@ -7,6 +7,25 @@ order), so layer 0 and layer k>0 are read through the identical
 merge-on-read path.
 A JSON manifest records shapes/dtypes/partitioning and makes the store
 re-openable (and resumable mid-inference).
+
+Vertex ordering (paper §3.8): ``create(order=...)`` relabels the graph
+into storage order at build time — topology rewritten, features streamed
+into the reordered partitioned layout — and records the *ID namespace*
+in the store:
+
+* everything inside the store (topology, spill ids, servable files, the
+  engine) speaks **internal** ids — positions in storage order;
+* callers keep speaking **external** ids — the original vertex numbering.
+
+The permutation is persisted as two mmap-loadable int64 sidecars,
+``old_of_new.npy`` (internal → external; the order itself) and
+``new_of_old.npy`` (external → internal; what serving translates
+through), plus an ``ordering`` manifest block carrying the canonical
+ordering name and a sha256-based permutation digest — the identity that
+``RunManifest`` pins so a resumed run fails fast (``StaleManifestError``)
+when the store was rebuilt under a different permutation.  Stores built
+with ``order="original"`` (and all pre-ordering stores) have an identity
+namespace: no sidecars, translation is a no-op.
 """
 
 from __future__ import annotations
@@ -36,12 +55,20 @@ def _feature_chunks(features) -> Iterator[np.ndarray]:
             yield np.asarray(chunk)
 
 
+#: sidecar filenames for the on-disk permutation (int64 .npy, mmap-loadable)
+OLD_OF_NEW_FILE = "old_of_new.npy"  # internal id -> external id (the order)
+NEW_OF_OLD_FILE = "new_of_old.npy"  # external id -> internal id (its inverse)
+
+
 class GraphStore:
     def __init__(self, root: str):
         self.root = root
         self.manifest_path = os.path.join(root, "manifest.json")
         self.manifest: dict = {}
         self._csr: CSRGraph | None = None
+        self._old_of_new: np.ndarray | None = None  # lazy sidecar mmaps
+        self._new_of_old: np.ndarray | None = None
+        self._identity_digest: str | None = None  # cached for legacy stores
 
     # ------------------------------------------------------------- create
     @staticmethod
@@ -52,16 +79,81 @@ class GraphStore:
         num_partitions: int = 8,
         feature_rows_per_spill: int | None = None,
         stats: IOStats | None = None,
+        order: str | np.ndarray = "original",
+        order_seed: int = 0,
     ) -> "GraphStore":
         """Build a store from a dense [V, d] feature array or — for layer-0
         stores larger than RAM — any iterable of [n_i, d] row chunks in
         vertex-id order.  Only one spill file's worth of rows is ever
-        buffered from an iterator."""
+        buffered from an iterator.
+
+        ``order`` selects the storage-order vertex namespace: an ordering
+        name (``"original"`` | ``"atlas"`` | ``"random"``, aliases
+        ``og``/``at``/``rnd`` accepted; ``atlas`` is the paper's §3.8
+        greedy completion-rate order) or an explicit permutation array
+        with ``order[rank] = external_id``.  Any non-identity order
+        relabels the topology and streams the features through
+        ``iter_relabeled_feature_chunks`` into the same partitioned
+        layout, persists the permutation sidecars next to the topology,
+        and records the ordering name + digest in the manifest — the
+        engine then runs purely in internal ids while serving translates
+        external ids through the sidecar.  A non-identity ``order``
+        requires randomly-addressable ``features`` (ndarray or memmap,
+        e.g. ``make_features_mmap``), not a chunk iterator.
+        """
+        from repro.core.reorder import (
+            canonical_order_name,
+            iter_relabeled_feature_chunks,
+            make_order,
+            permutation_digest,
+            relabel_graph,
+            relabel_map,
+            validate_permutation,
+        )
+
+        v = csr.num_vertices
+        if isinstance(order, str):
+            order_name = canonical_order_name(order)
+            perm = (
+                None
+                if order_name == "original"
+                else make_order(order_name, csr, seed=order_seed)
+            )
+        else:
+            perm = validate_permutation(order, v)
+            order_name = "custom"
+        if perm is not None and np.array_equal(perm, np.arange(v)):
+            perm, order_name = None, "original"  # identity: no translation
+        if perm is not None:
+            if not isinstance(features, np.ndarray):
+                raise TypeError(
+                    f"order={order_name!r} must gather features in storage "
+                    "order; pass a randomly-addressable array (ndarray or "
+                    "np.memmap, e.g. make_features_mmap), not a chunk iterator"
+                )
+            csr = relabel_graph(csr, perm)
+            features = iter_relabeled_feature_chunks(features, perm)
+
         os.makedirs(root, exist_ok=True)
         os.makedirs(os.path.join(root, "features_l0"), exist_ok=True)
         np.save(os.path.join(root, "indptr.npy"), csr.indptr)
         np.save(os.path.join(root, "indices.npy"), csr.indices)
-        v = csr.num_vertices
+        ordering_entry = {
+            "name": order_name,
+            "digest": permutation_digest(perm, num_vertices=v),
+        }
+        if perm is not None:
+            # sidecars land before the manifest references them, so a
+            # readable manifest always finds its translation tables
+            np.save(
+                os.path.join(root, OLD_OF_NEW_FILE), perm.astype(np.int64)
+            )
+            np.save(
+                os.path.join(root, NEW_OF_OLD_FILE),
+                relabel_map(perm).astype(np.int64),
+            )
+            ordering_entry["old_of_new"] = OLD_OF_NEW_FILE
+            ordering_entry["new_of_old"] = NEW_OF_OLD_FILE
         part = RangePartition(v, num_partitions)
         chunks = _feature_chunks(features)
         carry = np.empty((0, 0))  # rows yielded but not yet written
@@ -120,6 +212,7 @@ class GraphStore:
             "feat_dim": int(feat_dim),
             "feat_dtype": str(feat_dtype),
             "num_partitions": num_partitions,
+            "ordering": ordering_entry,
             "layer0_files": files,
         }
         store._write_manifest()
@@ -160,6 +253,70 @@ class GraphStore:
             indices = np.load(os.path.join(self.root, "indices.npy"), mmap_mode="r")
             self._csr = CSRGraph(indptr=indptr, indices=indices)
         return self._csr
+
+    # ------------------------------------------------- vertex ID namespace
+    @property
+    def ordering_name(self) -> str:
+        """Canonical name of the storage ordering (``original`` for every
+        pre-ordering store)."""
+        return self.manifest.get("ordering", {}).get("name", "original")
+
+    @property
+    def ordering_digest(self) -> str:
+        """Permutation digest of the storage ordering — the namespace
+        identity ``RunManifest`` pins for resume validation.  Legacy
+        manifests (no ``ordering`` block) digest the identity permutation
+        once and cache it."""
+        digest = self.manifest.get("ordering", {}).get("digest")
+        if digest:
+            return digest
+        if self._identity_digest is None:
+            from repro.core.reorder import permutation_digest
+
+            self._identity_digest = permutation_digest(
+                None, num_vertices=self.num_vertices
+            )
+        return self._identity_digest
+
+    def _ordering_sidecar(self, key: str) -> np.ndarray | None:
+        name = self.manifest.get("ordering", {}).get(key)
+        if name is None:
+            return None
+        path = os.path.join(self.root, name)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"store manifest records ordering sidecar {name!r} but "
+                f"{path} is missing — the store is corrupt or half-copied"
+            )
+        return np.load(path, mmap_mode="r")
+
+    def old_of_new(self) -> np.ndarray | None:
+        """Internal → external id map (mmap), or None when the namespace
+        is the identity (``order='original'`` / legacy stores)."""
+        if self._old_of_new is None:
+            self._old_of_new = self._ordering_sidecar("old_of_new")
+        return self._old_of_new
+
+    def new_of_old(self) -> np.ndarray | None:
+        """External → internal id map (mmap), or None for the identity
+        namespace — serving translates lookups through this."""
+        if self._new_of_old is None:
+            self._new_of_old = self._ordering_sidecar("new_of_old")
+        return self._new_of_old
+
+    def to_internal(self, external_ids: np.ndarray) -> np.ndarray:
+        """Translate external (original) vertex ids to internal (storage
+        order) ids; identity-free when the store is unordered."""
+        ids = np.asarray(external_ids)
+        m = self.new_of_old()
+        return ids if m is None else np.asarray(m[ids])
+
+    def to_external(self, internal_ids: np.ndarray) -> np.ndarray:
+        """Translate internal (storage order) ids back to the caller's
+        external ids."""
+        ids = np.asarray(internal_ids)
+        m = self.old_of_new()
+        return ids if m is None else np.asarray(m[ids])
 
     def layer0_spills(self) -> SpillSet:
         ss = SpillSet()

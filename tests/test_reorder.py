@@ -1,0 +1,324 @@
+"""The vertex ID namespace (ISSUE 8): reordering kernels, permutation
+plumbing, store-build relabeling, and the end-to-end invariant — a
+store's physical vertex order must never change what callers observe.
+
+Bit-equality notes.  ``np.add.reduceat`` sums segments pairwise while
+``np.add.at`` accumulates sequentially, so the two gain kernels are only
+bit-identical when every summand is exact — which holds when all
+in-degrees are powers of two (each 1/d_in is a power of two).  The same
+idea drives the end-to-end tests: graphs whose in-degrees are powers of
+two/four plus small-integer features and weights keep every engine sum
+exactly representable in fp32, so outputs must match the dense oracle
+*bitwise* across orderings — any namespace mix-up shows up as inequality
+rather than hiding inside a float tolerance.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.atlas import AtlasConfig, spills_to_dense
+from repro.core.reorder import (
+    _gain_add_at,
+    _gain_reduceat,
+    atlas_order,
+    canonical_order_name,
+    iter_relabeled_feature_chunks,
+    make_order,
+    permutation_digest,
+    relabel_features_chunked,
+    relabel_graph,
+    relabel_map,
+    validate_permutation,
+)
+from repro.graphs.csr import CSRGraph, build_csr, degrees_from_csr
+from repro.graphs.synth import community_graph, powerlaw_graph
+from repro.models.gnn import GNNLayerSpec, dense_reference
+from repro.session import AtlasSession
+from repro.storage.layout import GraphStore
+
+
+# --------------------------------------------------------------------------
+# Exact-arithmetic graph/model builders
+# --------------------------------------------------------------------------
+
+
+def pow_degree_graph(v, degree_choices, seed, self_loops, src_range=None):
+    """Every vertex's in-degree is exactly a power of two drawn from
+    ``degree_choices`` (self-loop included when ``self_loops``), with
+    distinct ring-offset sources.  ``src_range`` restricts sources to
+    ``[0, src_range)`` so vertices above it have zero out-degree (the
+    reduceat empty-segment case)."""
+    rng = np.random.default_rng(seed)
+    t = rng.choice(np.asarray(degree_choices), size=v)
+    n_ext = t - 1 if self_loops else t
+    mod = v if src_range is None else src_range
+    assert n_ext.max() < mod
+    dst = np.repeat(np.arange(v), n_ext)
+    offsets = np.concatenate([np.arange(1, n + 1) for n in n_ext])
+    src = (dst + offsets) % mod
+    if self_loops:
+        loop = np.arange(v)
+        src = np.concatenate([src, loop])
+        dst = np.concatenate([dst, loop])
+    csr = build_csr(src, dst, v)
+    in_deg, _ = degrees_from_csr(csr)
+    assert np.array_equal(np.sort(np.unique(in_deg)), np.sort(np.unique(t)))
+    return csr
+
+
+def int_features(v, d, seed):
+    return np.random.default_rng(seed).integers(-2, 3, size=(v, d)).astype(
+        np.float32
+    )
+
+
+def int_specs(kind, dims, seed):
+    """Layer stack with small-integer weights/bias: together with
+    power-of-two edge weights, every sum along the 2-layer pipeline stays
+    well inside fp32's 24-bit mantissa, so results are order-exact."""
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(len(dims) - 1):
+        d_in, d_out = dims[i], dims[i + 1]
+        w_rows = 2 * d_in if kind == "sage" else d_in
+        specs.append(GNNLayerSpec(
+            kind=kind, in_dim=d_in, out_dim=d_out,
+            activation=i < len(dims) - 2,
+            params={
+                "w": rng.integers(-1, 2, size=(w_rows, d_out)).astype(np.float32),
+                "b": rng.integers(-2, 3, size=d_out).astype(np.float32),
+            },
+        ))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Gain kernel: reduceat vs the scatter oracle
+# --------------------------------------------------------------------------
+
+
+def test_gain_reduceat_bit_equals_add_at_on_pow2_degrees():
+    """With power-of-two in-degrees every summand is exact, so pairwise
+    (reduceat) and sequential (add.at) summation must agree bitwise —
+    including at zero-out-degree vertices, where an unguarded reduceat
+    would return a neighbouring element instead of 0."""
+    csr = pow_degree_graph(600, (4, 16), seed=1, self_loops=False,
+                           src_range=300)
+    in_deg, out_deg = degrees_from_csr(csr)
+    assert (out_deg[300:] == 0).all()  # empty segments really occur
+    inv_in = np.zeros(csr.num_vertices)
+    inv_in[in_deg > 0] = 1.0 / in_deg[in_deg > 0]
+    g_fast = _gain_reduceat(csr, inv_in)
+    g_ref = _gain_add_at(csr, inv_in)
+    assert np.array_equal(g_fast, g_ref)
+    assert (g_fast[out_deg == 0] == 0.0).all()
+    assert np.array_equal(
+        atlas_order(csr, gain_impl="reduceat"),
+        atlas_order(csr, gain_impl="add_at"),
+    )
+
+
+def test_gain_reduceat_edgeless_and_general_graphs():
+    empty = CSRGraph(indptr=np.zeros(10, dtype=np.int64),
+                     indices=np.empty(0, dtype=np.int64))
+    assert np.array_equal(_gain_reduceat(empty, np.zeros(9)), np.zeros(9))
+    # general float input: pairwise vs sequential can differ in the last
+    # ulp, but the scores must agree to fp roundoff
+    for csr in (powerlaw_graph(800, 6, seed=11),
+                community_graph(800, 6, seed=5)):
+        in_deg, _ = degrees_from_csr(csr)
+        inv_in = np.zeros(csr.num_vertices)
+        inv_in[in_deg > 0] = 1.0 / in_deg[in_deg > 0]
+        np.testing.assert_allclose(
+            _gain_reduceat(csr, inv_in), _gain_add_at(csr, inv_in),
+            rtol=1e-12, atol=0,
+        )
+    with pytest.raises(ValueError, match="gain_impl"):
+        atlas_order(powerlaw_graph(50, 3, seed=0), gain_impl="nope")
+
+
+# --------------------------------------------------------------------------
+# Permutation plumbing
+# --------------------------------------------------------------------------
+
+
+def test_relabel_map_round_trip():
+    rng = np.random.default_rng(3)
+    order = rng.permutation(500)
+    new_of = relabel_map(order)
+    assert np.array_equal(new_of[order], np.arange(500))
+    assert np.array_equal(order[new_of], np.arange(500))
+    assert np.array_equal(relabel_map(new_of), order)
+
+
+def test_relabel_graph_inverse_restores_edges():
+    csr = powerlaw_graph(400, 7, seed=13)
+    order = make_order("at", csr)
+    back = relabel_graph(relabel_graph(csr, order), relabel_map(order))
+    src0, dst0 = csr.edges_for_range(0, csr.num_vertices)
+    src1, dst1 = back.edges_for_range(0, back.num_vertices)
+    canon = lambda s, d: np.sort(s.astype(np.int64) * csr.num_vertices + d)
+    assert np.array_equal(canon(src0, dst0), canon(src1, dst1))
+
+
+def test_validate_permutation_rejects_non_permutations():
+    assert validate_permutation(np.arange(5)[::-1], 5).dtype == np.int64
+    with pytest.raises(ValueError, match="length-5"):
+        validate_permutation(np.arange(4), 5)
+    with pytest.raises(ValueError, match="out-of-range"):
+        validate_permutation(np.array([0, 1, 5]), 3)
+    with pytest.raises(ValueError, match="not a permutation"):
+        validate_permutation(np.array([0, 1, 1]), 3)
+    with pytest.raises(ValueError, match="unknown ordering"):
+        canonical_order_name("zorder")
+
+
+def test_relabel_features_chunked_bit_equals_take(tmp_path):
+    rng = np.random.default_rng(5)
+    feats = rng.standard_normal((1000, 7)).astype(np.float32)
+    order = rng.permutation(1000)
+    want = np.take(feats, order, axis=0)
+    for chunk_rows in (1, 37, 256, 10_000):
+        got = relabel_features_chunked(feats, order, chunk_rows=chunk_rows)
+        assert np.array_equal(got, want)
+    # memmap source: chunked gather, plain-ndarray chunks out
+    path = str(tmp_path / "feats.npy")
+    np.save(path, feats)
+    mm = np.load(path, mmap_mode="r")
+    got = relabel_features_chunked(mm, order, chunk_rows=64)
+    assert type(got) is np.ndarray and np.array_equal(got, want)
+    chunks = list(iter_relabeled_feature_chunks(mm, order, chunk_rows=300))
+    assert [len(c) for c in chunks] == [300, 300, 300, 100]
+    assert np.array_equal(np.concatenate(chunks), want)
+
+
+def test_permutation_digest_identity_and_sensitivity():
+    v = 1000
+    ident = permutation_digest(None, v)
+    assert ident == permutation_digest(np.arange(v))
+    assert ident != permutation_digest(np.arange(v + 1))
+    swapped = np.arange(v)
+    swapped[[0, 1]] = swapped[[1, 0]]
+    assert permutation_digest(swapped) != ident
+    with pytest.raises(ValueError, match="num_vertices"):
+        permutation_digest(None)
+
+
+# --------------------------------------------------------------------------
+# Store build: relabeled layout + persisted namespace identity
+# --------------------------------------------------------------------------
+
+
+def test_store_build_with_ordering_sidecars_and_rows(tmp_path):
+    v, d = 500, 6
+    csr = powerlaw_graph(v, 5, seed=17)
+    feats = int_features(v, d, seed=18)
+    store = GraphStore.create(str(tmp_path / "s"), csr, feats,
+                              num_partitions=4, order="at")
+    order = make_order("at", csr)
+    assert store.ordering_name == "atlas"
+    assert store.ordering_digest == permutation_digest(order)
+    assert np.array_equal(np.asarray(store.old_of_new()), order)
+    assert np.array_equal(np.asarray(store.new_of_old()), relabel_map(order))
+    ext = np.random.default_rng(0).integers(0, v, size=64)
+    assert np.array_equal(store.to_external(store.to_internal(ext)), ext)
+    # layer-0 rows land in internal order, bit-identical to feats[order]
+    rows = spills_to_dense(store.layer0_spills(), v, d)
+    assert np.array_equal(rows, feats[order])
+    # reopened store sees the same namespace
+    again = GraphStore.open(str(tmp_path / "s"))
+    assert again.ordering_name == "atlas"
+    assert again.ordering_digest == store.ordering_digest
+    assert np.array_equal(np.asarray(again.old_of_new()), order)
+
+
+def test_store_build_custom_and_identity_orders(tmp_path):
+    v, d = 300, 4
+    csr = powerlaw_graph(v, 5, seed=19)
+    feats = int_features(v, d, seed=20)
+    perm = np.random.default_rng(21).permutation(v)
+    store = GraphStore.create(str(tmp_path / "c"), csr, feats,
+                              num_partitions=2, order=perm)
+    assert store.ordering_name == "custom"
+    assert store.ordering_digest == permutation_digest(perm)
+    assert np.array_equal(
+        spills_to_dense(store.layer0_spills(), v, d), feats[perm]
+    )
+    # an explicit identity permutation collapses to "original"
+    ident = GraphStore.create(str(tmp_path / "i"), csr, feats,
+                              num_partitions=2, order=np.arange(v))
+    assert ident.ordering_name == "original"
+    assert ident.new_of_old() is None
+    # legacy/unordered stores: identity namespace, identity digest
+    legacy = GraphStore.create(str(tmp_path / "l"), csr, feats,
+                               num_partitions=2)
+    assert legacy.ordering_name == "original"
+    assert legacy.ordering_digest == permutation_digest(None, v)
+    assert legacy.old_of_new() is None
+    assert np.array_equal(legacy.to_internal(perm), perm)
+    with pytest.raises(ValueError, match="not a permutation"):
+        GraphStore.create(str(tmp_path / "bad"), csr, feats,
+                          order=np.zeros(v, dtype=np.int64))
+    # a non-identity order needs randomly-addressable features
+    with pytest.raises(TypeError, match="randomly-addressable"):
+        GraphStore.create(str(tmp_path / "it"), csr, iter(feats), order="rnd")
+
+
+# --------------------------------------------------------------------------
+# End to end: ordering must be invisible to callers, bit for bit
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sage"])
+def test_e2e_output_bit_identical_across_orderings(tmp_path, kind):
+    """Reordered store -> infer -> publish -> lookup by original id gives
+    bit-identical embeddings for every ordering (exact-arithmetic graph,
+    so this is equality, not a tolerance) — and exactly equals the dense
+    oracle in the external namespace."""
+    v, d = 600, 4
+    csr = pow_degree_graph(v, (4, 16), seed=23, self_loops=(kind == "gcn"))
+    feats = int_features(v, d, seed=24)
+    specs = int_specs(kind, [d, d, d], seed=25)
+    ref = dense_reference(csr, feats, specs)
+    rng = np.random.default_rng(26)
+    q = rng.integers(0, v, size=256)  # external ids, duplicates included
+    outs = {}
+    for ordering in ("og", "rnd", "at"):
+        root = tmp_path / ordering
+        store = GraphStore.create(str(root / "store"), csr, feats,
+                                  num_partitions=4, order=ordering,
+                                  order_seed=9)
+        cfg = AtlasConfig(chunk_bytes=64 * d * 4, hot_slots=v // 4,
+                          eviction="at")
+        with AtlasSession(store, config=cfg,
+                          workdir=str(root / "work")) as session:
+            result = session.infer(specs)
+            if ordering != "og":
+                assert result.metrics[0].evictions > 0  # layout exercised
+            out = spills_to_dense(result.final.spills, v, specs[-1].out_dim)
+            out = out[store.to_internal(np.arange(v))]  # -> external order
+            session.publish(result.final, block_rows=64, rows_per_file=200)
+            with session.reader(result.final.layer,
+                                cache_bytes=1 << 20) as reader:
+                assert np.array_equal(reader.lookup(q), out[q])
+                assert np.array_equal(reader.lookup(np.arange(v)), out)
+        outs[ordering] = out
+    assert np.array_equal(outs["og"], ref)
+    for ordering in ("rnd", "at"):
+        assert np.array_equal(outs[ordering], outs["og"]), (
+            f"{kind}: {ordering} store served different bits"
+        )
+
+
+def test_reader_reports_missing_ids_in_external_namespace(tmp_path):
+    v, d = 200, 4
+    csr = pow_degree_graph(v, (4,), seed=27, self_loops=True)
+    feats = int_features(v, d, seed=28)
+    store = GraphStore.create(str(tmp_path / "store"), csr, feats,
+                              num_partitions=2, order="rnd", order_seed=1)
+    with AtlasSession(store, workdir=str(tmp_path / "work")) as session:
+        result = session.infer(int_specs("gcn", [d, d], seed=29))
+        session.publish(result.final)
+        with session.reader(result.final.layer) as reader:
+            with pytest.raises(KeyError, match=f"{v + 3}"):
+                reader.lookup(np.array([0, v + 3]))  # beyond the id space

@@ -195,7 +195,7 @@ def test_resume_rejects_unparseable_or_malformed_manifest(tmp_path):
     with pytest.raises(StaleManifestError, match="not valid JSON"):
         session.infer(specs, resume=True)
     with open(session.run_manifest_path, "w") as f:
-        json.dump({"schema_version": 2, "completed_layers": 0}, f)  # fields gone
+        json.dump({"schema_version": 3, "completed_layers": 0}, f)  # fields gone
     with pytest.raises(StaleManifestError, match="malformed field"):
         session.infer(specs, resume=True)
 
@@ -222,6 +222,37 @@ def test_resume_rejects_foreign_store(tmp_path):
     manifest.save(session.run_manifest_path)
     with pytest.raises(StaleManifestError, match="vertices"):
         session.infer(specs, resume=True)
+
+
+def test_resume_rejects_permutation_digest_mismatch(tmp_path):
+    """A run manifest carries the store's ordering identity; resuming
+    against a store built under a different vertex order must fail fast
+    and name both digests — internal spill ids from the old namespace
+    would silently address the wrong vertices otherwise."""
+    csr = powerlaw_graph(300, 5, seed=3, self_loops=True)
+    feats = make_features(300, 8, seed=3)
+    specs = init_gnn_params("gcn", [8, 4], seed=3)
+    cfg = AtlasConfig(chunk_bytes=64 * 8 * 4, hot_slots=300)
+    store_at = GraphStore.create(
+        str(tmp_path / "s_at"), csr, feats, num_partitions=4, order="at"
+    )
+    wd = str(tmp_path / "work")
+    AtlasSession(store_at, config=cfg, workdir=wd).infer(specs)
+    store_rnd = GraphStore.create(
+        str(tmp_path / "s_rnd"), csr, feats, num_partitions=4, order="rnd"
+    )
+    with pytest.raises(StaleManifestError, match="permutation digest mismatch") as ei:
+        AtlasSession(store_rnd, config=cfg, workdir=wd).infer(specs, resume=True)
+    msg = str(ei.value)
+    assert store_at.ordering_digest in msg and store_rnd.ordering_digest in msg
+    # same graph in the identity namespace is also a different store
+    store_og = GraphStore.create(
+        str(tmp_path / "s_og"), csr, feats, num_partitions=4
+    )
+    with pytest.raises(StaleManifestError, match="permutation digest mismatch"):
+        AtlasSession(store_og, config=cfg, workdir=wd).infer(specs, resume=True)
+    # the matching store still resumes
+    AtlasSession(store_at, config=cfg, workdir=wd).infer(specs, resume=True)
 
 
 def test_resume_lists_missing_spill_paths(tmp_path):
