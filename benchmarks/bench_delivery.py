@@ -373,6 +373,87 @@ def report_io(sweep) -> None:
             )
 
 
+def run_dist_check(v, d, kind, shards, workers, chunk_vertices, seed,
+                   trace_path=None):
+    """``--mode dist``: the shard-parallel engine vs the single-machine
+    session on an exact-arithmetic graph (``repro.exact``) — every fp32
+    sum exactly representable, so the N-shard run with cross-shard
+    message routing must reproduce the single-machine spills **and** the
+    rows served by the unmodified reader bit for bit.  Any tolerance here
+    would hide a routing/namespace bug, so the comparison is
+    ``np.array_equal``, not allclose."""
+    import shutil
+
+    from repro.dist import DistSession
+    from repro.exact import exact_graph_and_specs
+
+    csr, feats, specs = exact_graph_and_specs(v, d, kind=kind, seed=seed)
+    hot_slots = max(16, v // 8)
+    cfg = AtlasConfig(
+        chunk_bytes=chunk_vertices * d * 4, hot_slots=hot_slots,
+        trace=trace_path is not None,
+    )
+    with tempfile.TemporaryDirectory() as td:
+        store = GraphStore.create(td + "/store", csr, feats, num_partitions=4)
+        t0 = time.perf_counter()
+        with AtlasSession(
+            store,
+            config=AtlasConfig(chunk_bytes=cfg.chunk_bytes, hot_slots=hot_slots),
+            workdir=td + "/single",
+        ) as single:
+            ref = single.infer(specs)
+            dense_ref = spills_to_dense(ref.final.spills, v, ref.final.dim)
+        single_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        with DistSession(
+            store, shards=shards, config=cfg, workers=workers,
+            workdir=td + "/dist", trace=trace_path is not None,
+        ) as dist:
+            result = dist.infer(specs)
+            dense_dist = spills_to_dense(result.final.spills, v, result.final.dim)
+            version = dist.publish(result.final)
+            probe = np.arange(0, v, 97)
+            with dist.reader(result.final.layer) as reader:
+                served = reader.lookup(probe)
+            dist_s = time.perf_counter() - t0
+            if trace_path and result.trace_path:
+                shutil.copyfile(result.trace_path, trace_path)
+    if not np.array_equal(dense_dist, dense_ref):
+        raise AssertionError(
+            f"dist spills diverged from single-machine ({kind}, "
+            f"shards={shards}, workers={workers})"
+        )
+    if not np.array_equal(served, dense_ref[probe]):
+        raise AssertionError(
+            f"served rows diverged from single-machine ({kind}, "
+            f"shards={shards}, workers={workers})"
+        )
+    exchange_bytes = sum(
+        r["exchange"]["sent_bytes"]
+        for reports in result.shard_reports.values()
+        for r in reports
+    )
+    rec = {
+        "kind": kind,
+        "vertices": v,
+        "shards": shards,
+        "workers": workers,
+        "layers": len(specs),
+        "epoch": version.epoch,
+        "single_seconds": single_s,
+        "dist_seconds": dist_s,
+        "exchange_sent_bytes": exchange_bytes,
+        "bit_identical": True,
+        "served_identical": True,
+    }
+    print(
+        f"  {kind:<5} shards={shards} workers={workers}: "
+        f"single {single_s:6.2f}s  dist {dist_s:6.2f}s  "
+        f"exchange {exchange_bytes} B  spills+served bit-identical"
+    )
+    return rec
+
+
 def build_features(args, workdir: str):
     """Dense in-RAM features, or an on-disk memmap for multi-M graphs."""
     if args.mmap_features or args.vertices >= 1_000_000:
@@ -396,8 +477,16 @@ def main():
                          "(default: just --hot-frac)")
     ap.add_argument("--chunk-vertices", type=int, default=4096)
     ap.add_argument("--mode",
-                    choices=["micro", "engine", "both", "backend", "io"],
+                    choices=["micro", "engine", "both", "backend", "io",
+                             "dist"],
                     default="micro")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="shard count for --mode dist")
+    ap.add_argument("--dist-workers", default="process",
+                    choices=["thread", "process"],
+                    help="worker harness for --mode dist")
+    ap.add_argument("--dist-kinds", default="gcn,sage",
+                    help="comma list of GNN kinds for --mode dist")
     ap.add_argument("--backend", default="numpy",
                     choices=["numpy", "jax", "pallas", "pallas-interpret"],
                     help="chunk-aggregation backend for --mode engine and "
@@ -553,7 +642,25 @@ def main():
         )
         print(f"  speedup ({other} over numpy): {speedup:.2f}x")
         all_results["backend"] = {**res, f"{other}_speedup": speedup}
-    if args.trace:
+    if args.mode == "dist":
+        # ISSUE 9: shard-parallel engine vs single-machine, exact
+        # arithmetic, bitwise assertion on spills AND served rows; the
+        # merged per-shard trace (when --trace) lands at args.trace
+        print(f"\n== dist (shard-parallel vs single-machine, "
+              f"shards={args.shards}) ==")
+        kinds = [k for k in args.dist_kinds.split(",") if k]
+        dist_rows = []
+        for i, kind in enumerate(kinds):
+            dist_rows.append(run_dist_check(
+                args.vertices, args.dim, kind, args.shards,
+                args.dist_workers, args.chunk_vertices, args.seed,
+                trace_path=args.trace if i == 0 else None,
+            ))
+        print("  spills + served rows: bit-identical across all kinds")
+        all_results["dist"] = dist_rows
+        if args.trace:
+            print(f"merged per-shard trace -> {args.trace}")
+    if args.trace and args.mode != "dist":
         # one extra traced pass of the full engine (vectorized impl):
         # per-thread timeline + telemetry, Perfetto-loadable, analysable
         # with `python -m repro.launch.obs_report <trace> --check`

@@ -13,16 +13,30 @@ import time
 import numpy as np
 
 from repro.core.atlas import AtlasConfig, spills_to_dense
-from repro.graphs.synth import make_features, powerlaw_graph
+from repro.graphs.synth import (
+    community_graph,
+    make_features,
+    powerlaw_graph,
+    rmat_graph,
+)
 from repro.models.gnn import init_gnn_params
 from repro.session import AtlasSession
 from repro.storage.layout import GraphStore
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
 
+#: named graph generators the benchmark CLIs expose (--graph/--graphs);
+#: all share the (num_vertices, avg_degree, seed=, self_loops=) signature
+GRAPH_BUILDERS = {
+    "powerlaw": powerlaw_graph,
+    "community": community_graph,
+    "rmat": rmat_graph,
+}
 
-def bench_graph(v=20_000, deg=12, d=64, seed=7, self_loops=True):
-    csr = powerlaw_graph(v, deg, seed=seed, self_loops=self_loops)
+
+def bench_graph(v=20_000, deg=12, d=64, seed=7, self_loops=True,
+                graph="powerlaw"):
+    csr = GRAPH_BUILDERS[graph](v, deg, seed=seed, self_loops=self_loops)
     feats = make_features(v, d, seed=seed + 1)
     return csr, feats
 

@@ -32,6 +32,7 @@ from repro.graphs.synth import (
     make_features,
     make_features_mmap,
     powerlaw_graph,
+    rmat_graph,
 )
 
 ORDERINGS = ("og", "rnd", "at")
@@ -55,6 +56,10 @@ def run(v=20_000, deg=12, d=64, hot_frac=6, graphs=("powerlaw", "community"),
             "community": lambda: (community_graph(v, deg, num_communities=64,
                                                   seed=5),
                                   _features(v, d, 6, scratch, mmap_threshold)),
+            # hierarchical (Kronecker) communities: locality at every
+            # scale, so ordering headroom is graded rather than binary
+            "rmat": lambda: (rmat_graph(v, deg, seed=9),
+                             _features(v, d, 4, scratch, mmap_threshold)),
         }
         for gname in graphs:
             csr, feats = builders[gname]()
@@ -106,7 +111,7 @@ def main():
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--hot-frac", type=int, default=6)
     ap.add_argument("--graphs", nargs="+", default=["powerlaw", "community"],
-                    choices=["powerlaw", "community"])
+                    choices=["powerlaw", "community", "rmat"])
     ap.add_argument("--mmap-threshold", type=int, default=200_000,
                     help="generate features via an on-disk memmap at or "
                          "above this vertex count")

@@ -16,14 +16,14 @@ import argparse
 import os
 import tempfile
 
-from benchmarks.common import gnn_specs, run_atlas, save
+from benchmarks.common import GRAPH_BUILDERS, gnn_specs, run_atlas, save
 from repro.core.atlas import AtlasConfig
-from repro.graphs.synth import make_features, make_features_mmap, powerlaw_graph
+from repro.graphs.synth import make_features, make_features_mmap
 
 
 def run(v=20_000, deg=12, d=64, fracs=(40, 20, 10, 5, 3, 2, 1),
-        mmap_threshold=200_000):
-    csr = powerlaw_graph(v, deg, seed=7)
+        mmap_threshold=200_000, graph="powerlaw"):
+    csr = GRAPH_BUILDERS[graph](v, deg, seed=7)
     specs = gnn_specs("gcn", d)
     rows = []
     with tempfile.TemporaryDirectory() as scratch:
@@ -41,6 +41,7 @@ def run(v=20_000, deg=12, d=64, fracs=(40, 20, 10, 5, 3, 2, 1),
                                              order="at")
             m0 = metrics[0]
             rows.append({
+                "graph": graph,
                 "hot_slots": slots, "wall_s": wall, "reloads": m0.reloads,
                 "evictions": m0.evictions,
                 "peak_cold": m0.peak_cold_resident,
@@ -60,9 +61,12 @@ def main():
     ap.add_argument("--fracs", nargs="+", type=int,
                     default=[40, 20, 10, 5, 3, 2, 1])
     ap.add_argument("--mmap-threshold", type=int, default=200_000)
+    ap.add_argument("--graph", default="powerlaw",
+                    choices=sorted(GRAPH_BUILDERS))
     args = ap.parse_args()
     run(v=args.vertices, deg=args.degree, d=args.dim,
-        fracs=tuple(args.fracs), mmap_threshold=args.mmap_threshold)
+        fracs=tuple(args.fracs), mmap_threshold=args.mmap_threshold,
+        graph=args.graph)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.distributed.atlas_dist import (  # noqa: E402
+from repro.dist.mesh import (  # noqa: E402
     build_combined_plan,
     make_combined_layer_step,
     pad_features,

@@ -1,5 +1,11 @@
-"""Distributed ATLAS: the broadcast execution model as a push-style SpMM
-over a (data, model) / (pod, data, model) mesh.
+"""Device-mesh building blocks for distributed ATLAS: the broadcast
+execution model as a push-style SpMM over a (data, model) /
+(pod, data, model) mesh.
+
+(Salvaged from the seed's ``repro.distributed.atlas_dist``; the
+out-of-core shard harness in ``repro.dist`` reuses the ``shard_map``
+compat wrapper and the (src_shard, dst_shard) pre-bucketing idea, and
+``MeshExchange`` routes its buckets with the same tiled ``all_to_all``.)
 
 The paper's single-machine insight — *stream every source feature exactly
 once and push messages along out-edges, instead of destinations pulling

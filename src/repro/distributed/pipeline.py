@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.distributed.atlas_dist import shard_map
+from repro.dist.mesh import shard_map
 
 
 def make_pipeline_forward(mesh: Mesh, stage_axis: str, layer_fn):

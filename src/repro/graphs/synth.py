@@ -71,6 +71,57 @@ def uniform_graph(
     return build_csr(src, dst, num_vertices)
 
 
+def rmat_graph(
+    num_vertices: int,
+    avg_degree: float,
+    seed: int = 0,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    self_loops: bool = True,
+    shuffle_ids: bool = True,
+) -> CSRGraph:
+    """R-MAT / Kronecker recursive-matrix graph (Chakrabarti et al.;
+    Graph500 uses a=0.57, b=c=0.19, d=0.05 — the defaults here).
+
+    Each edge descends ``ceil(log2 V)`` levels of a recursively
+    partitioned adjacency matrix, choosing a quadrant per level with
+    probabilities (a, b, c, d): self-similar communities at every scale
+    plus a heavy-tailed degree distribution — the structural character
+    the fig6/fig8 sweeps need beyond the flat-block ``community_graph``
+    (real community locality is hierarchical, so ordering headroom and
+    eviction churn are graded, not binary).  Ids are shuffled by default,
+    like ``community_graph`` — structure-correlated ids would hand the
+    reordering experiments their answer for free."""
+    d = 1.0 - a - b - c
+    if d < 0:
+        raise ValueError(f"quadrant probabilities sum to {a + b + c} > 1")
+    rng = np.random.default_rng(seed)
+    num_edges = int(num_vertices * avg_degree)
+    levels = max(1, int(np.ceil(np.log2(max(num_vertices, 2)))))
+    src = np.zeros(num_edges, dtype=np.int64)
+    dst = np.zeros(num_edges, dtype=np.int64)
+    for _ in range(levels):
+        r = rng.random(num_edges)
+        # quadrant draw: [0,a) -> TL, [a,a+b) -> TR, [a+b,a+b+c) -> BL,
+        # rest -> BR.  src bit set in the Bottom half, dst bit in the
+        # Right half.
+        src_bit = r >= a + b
+        dst_bit = ((r >= a) & (r < a + b)) | (r >= a + b + c)
+        src = src * 2 + src_bit
+        dst = dst * 2 + dst_bit
+    keep = (src < num_vertices) & (dst < num_vertices) & (src != dst)
+    src, dst = src[keep], dst[keep]
+    if shuffle_ids:
+        perm = rng.permutation(num_vertices)
+        src, dst = perm[src], perm[dst]
+    if self_loops:
+        loop = np.arange(num_vertices, dtype=src.dtype)
+        src = np.concatenate([src, loop])
+        dst = np.concatenate([dst, loop])
+    return build_csr(src, dst, num_vertices)
+
+
 def make_features(
     num_vertices: int,
     feat_dim: int,

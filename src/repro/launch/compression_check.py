@@ -16,7 +16,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.distributed.atlas_dist import shard_map  # noqa: E402
+from repro.dist.mesh import shard_map  # noqa: E402
 from repro.distributed.compression import compressed_psum  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 

@@ -28,7 +28,7 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.distributed.atlas_dist import (  # noqa: E402
+from repro.dist.mesh import (  # noqa: E402
     build_combined_plan,
     make_combined_layer_step,
     make_layer_step,

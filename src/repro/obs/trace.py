@@ -304,10 +304,44 @@ class Tracer:
         return path
 
 
+def merge_trace_files(paths: list[str], out_path: str) -> str:
+    """Merge several exported trace files into one timeline.
+
+    Used by the process-mode distributed runner: each shard worker
+    exports its own trace; the merge remaps every input file onto a
+    distinct synthetic pid (1, 2, ...) — per-layer subprocesses of the
+    same shard reuse OS pids, so the real pid cannot be the track key —
+    and labels it with a ``process_name`` metadata record derived from
+    the filename.  Event timestamps are kept as-is: every worker's
+    tracer starts its clock at process start, so tracks align at t=0 per
+    (shard, layer) rather than on one global clock — good enough for the
+    within-layer phase breakdown the dist smoke checks."""
+    merged: list[dict] = []
+    for i, path in enumerate(sorted(paths)):
+        with open(path) as f:
+            data = json.load(f)
+        pid = i + 1
+        label = os.path.splitext(os.path.basename(path))[0]
+        merged.append({
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": label},
+        })
+        for ev in data.get("traceEvents", []):
+            ev = dict(ev)
+            ev["pid"] = pid
+            merged.append(ev)
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"traceEvents": merged, "displayTimeUnit": "ms"}, f)
+    os.replace(tmp, out_path)
+    return out_path
+
+
 __all__ = [
     "CATEGORIES",
     "NULL_TRACER",
     "NullTracer",
     "Tracer",
     "as_tracer",
+    "merge_trace_files",
 ]

@@ -44,8 +44,13 @@ def compact_spills(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     stats: IOStats | None = None,
     scheduler=None,
+    prefix: str = "",
 ) -> list[str]:
     """Merge an overlapping spill set into disjoint sorted servable files.
+
+    ``prefix`` namespaces the output filenames (``<prefix>servable_<i>``)
+    so several compactions over disjoint id ranges — one per shard of a
+    distributed run — can stage into the same version directory.
 
     Memory stays bounded: only the id columns (8 bytes/row) are held to
     compute the global cut points; row data streams through one target
@@ -86,7 +91,7 @@ def compact_spills(
         order = np.argsort(ids, kind="stable")
         ids, rows = ids[order], rows[order]
         assert len(ids) == end - start
-        path = os.path.join(out_dir, f"servable_{i:05d}.spill")
+        path = os.path.join(out_dir, f"{prefix}servable_{i:05d}.spill")
         if scheduler is not None:
             scheduler.submit_spill(
                 path, ids, rows, stats=stats, presorted=True,

@@ -49,6 +49,7 @@ import json
 import os
 import shutil
 import threading
+import time
 
 from repro.core.atlas import AtlasConfig, AtlasEngine, LayerMetrics
 from repro.graphs.csr import degrees_from_csr
@@ -97,7 +98,7 @@ class RunManifest:
     store_digest: str = ""
     schema_version: int = RUN_MANIFEST_SCHEMA_VERSION
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, scheduler=None) -> None:
         payload = {
             "schema_version": self.schema_version,
             "num_vertices": self.num_vertices,
@@ -112,6 +113,13 @@ class RunManifest:
         with open(tmp, "w") as f:
             json.dump(payload, f, indent=2)
         os.replace(tmp, path)
+        if scheduler is not None:
+            # manifest durability rides the write-back scheduler's next
+            # group-commit barrier (the following layer's, or the final
+            # one in ``infer``) instead of an inline fsync; the advance
+            # itself still happens strictly after the layer's data
+            # barrier, so the crash ordering is unchanged
+            scheduler.note_dirty(path)
 
     @staticmethod
     def load(path: str) -> "RunManifest":
@@ -329,10 +337,14 @@ class AtlasSession:
         workdir: str | None = None,
         engine: AtlasEngine | None = None,
         trace=None,
+        clock=None,
     ):
         self.store = GraphStore.open(store) if isinstance(store, str) else store
         self.engine = engine if engine is not None else AtlasEngine(config)
         self.workdir = workdir or os.path.join(self.store.root, "run")
+        # injectable time source (epoch seconds): publish timestamps and
+        # the retain_ttl retention clock — tests pin it
+        self._clock = clock if clock is not None else time.time
         # trace: None defers to AtlasConfig.trace; True/False overrides
         # it; a Tracer instance is used directly (one timeline can span
         # several sessions/runs)
@@ -474,7 +486,7 @@ class AtlasSession:
                 metrics.append(m)
                 pending_commit = self._layer_commit(
                     manifest, manifest_path, l, layer_spills, barrier_wait,
-                    spills, layers,
+                    spills, layers, scheduler,
                 )
                 spills = layer_spills
                 layers[l + 1] = self._handle(
@@ -483,6 +495,9 @@ class AtlasSession:
             if pending_commit is not None:
                 pending_commit()
             if scheduler is not None:
+                # the final manifest write deferred its fsync to the next
+                # group commit — this is it
+                scheduler.barrier()
                 # the run-wide I/O accounting, captured at its final
                 # (post-last-barrier, pre-close) state — the close below
                 # only reclaims the I/O thread
@@ -544,7 +559,7 @@ class AtlasSession:
 
     def _layer_commit(
         self, manifest, manifest_path, l, layer_spills, barrier_wait,
-        prev_spills, layers,
+        prev_spills, layers, scheduler=None,
     ):
         """Build layer ``l``'s deferred commit closure: join the
         overlapped group commit, then advance the manifest, then drop the
@@ -566,7 +581,11 @@ class AtlasSession:
             barrier_wait()
             manifest.completed_layers = l + 1
             manifest.spills[l + 1] = [f.path for f in layer_spills.files]
-            manifest.save(manifest_path)
+            manifest.save(
+                manifest_path,
+                scheduler=scheduler if scheduler is not None
+                and not scheduler.closed else None,
+            )
             if cfg.delete_intermediate and l > 0:
                 prev_spills.delete_all()
                 layers.pop(l, None)
@@ -588,6 +607,7 @@ class AtlasSession:
         rows_per_file: int | None = None,
         stats: IOStats | None = None,
         retain: int = 0,
+        retain_ttl: float | None = None,
     ) -> PublishedVersion:
         """Compact one layer's spills into a new epoch-numbered servable
         version and atomically swap the store's current-version pointer.
@@ -596,11 +616,13 @@ class AtlasSession:
         session's last ``infer`` result.
 
         Retention: at most ``retain`` *unpinned* historical (non-current)
-        versions survive this publish — the newest ones; the rest are
+        versions survive this publish — the newest ones; additionally any
+        unpinned version younger than ``retain_ttl`` seconds (against its
+        recorded ``published_at`` timestamp) survives.  The rest are
         garbage-collected before returning.  Versions pinned by an open
-        reader always survive and do not count against ``retain``.  The
-        default ``retain=0`` keeps the original collect-everything-stale
-        behavior."""
+        reader always survive and do not count against either budget.
+        The default ``retain=0, retain_ttl=None`` keeps the original
+        collect-everything-stale behavior."""
         handle = self._resolve(layer, spills)
         with self._publish_lock:
             scheduler = self._publish_scheduler()
@@ -612,6 +634,7 @@ class AtlasSession:
                     rows_per_file=rows_per_file,
                     stats=stats,
                     scheduler=scheduler,
+                    published_at=self._clock(),
                 )
             except BaseException:
                 # a failed publish may leave the scheduler with a sticky
@@ -622,7 +645,9 @@ class AtlasSession:
                     self._io_sched = None
                 raise
             self._published_layers.add(handle.layer)
-            removed = self._gc_locked(handle.layer, retain=retain)
+            removed = self._gc_locked(
+                handle.layer, retain=retain, retain_ttl=retain_ttl
+            )
         return PublishedVersion(
             layer=handle.layer,
             epoch=info["epoch"],
@@ -655,20 +680,26 @@ class AtlasSession:
             )
         return self._last_result.layers[layer]
 
-    def gc(self, layer: int, retain: int = 0) -> list[int]:
+    def gc(
+        self, layer: int, retain: int = 0, retain_ttl: float | None = None
+    ) -> list[int]:
         """Drop stale (non-current) versions of ``layer`` that no open
-        reader pins, keeping the newest ``retain`` unpinned ones.
+        reader pins, keeping the newest ``retain`` unpinned ones and any
+        unpinned version younger than ``retain_ttl`` seconds.
         Returns the collected epoch numbers."""
         with self._publish_lock:  # never concurrent with a manifest write
-            return self._gc_locked(layer, retain=retain)
+            return self._gc_locked(layer, retain=retain, retain_ttl=retain_ttl)
 
-    def _gc_locked(self, layer: int, retain: int = 0) -> list[int]:
+    def _gc_locked(
+        self, layer: int, retain: int = 0, retain_ttl: float | None = None
+    ) -> list[int]:
         """GC body; caller holds ``_publish_lock``.
 
         Only the manifest retirement happens under the pin lock; the
         (potentially large) file deletion runs after it is released, so
         concurrent ``reader`` opens never stall on disk I/O."""
         retain = max(0, int(retain))
+        now = self._clock() if retain_ttl is not None else None
         with self._lock:
             try:
                 current = self.store.current_servable_epoch(layer)
@@ -684,6 +715,17 @@ class AtlasSession:
                 if kept_unpinned < retain:
                     kept_unpinned += 1
                     continue
+                if retain_ttl is not None:
+                    # versions predating publish timestamps (no
+                    # published_at recorded) count as infinitely old
+                    published_at = self.store.servable_version_info(
+                        layer, epoch
+                    ).get("published_at")
+                    if (
+                        published_at is not None
+                        and now - float(published_at) < retain_ttl
+                    ):
+                        continue
                 info = self.store.drop_servable_version(
                     layer, epoch, delete_files=False
                 )

@@ -218,11 +218,17 @@ class GraphStore:
         store._write_manifest()
         return store
 
-    def _write_manifest(self) -> None:
+    def _write_manifest(self, scheduler=None) -> None:
         tmp = self.manifest_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(self.manifest, f, indent=2)
         os.replace(tmp, self.manifest_path)
+        if scheduler is not None:
+            # group-commit the manifest swap: durability rides the
+            # write-back scheduler's next barrier instead of an inline
+            # fsync — ordering (data durable -> manifest advance) is
+            # already guaranteed by the barrier *before* this write
+            scheduler.note_dirty(self.manifest_path)
 
     # --------------------------------------------------------------- open
     @staticmethod
@@ -384,6 +390,92 @@ class GraphStore:
             )
         return entry
 
+    def begin_servable_version(self, layer: int) -> tuple[int, str]:
+        """Reserve the next epoch of ``layer`` and create its staging
+        directory (``v<epoch>.compact``).  Writers — one, or one per shard
+        of a distributed publish — compact into the staging dir, then the
+        version lands atomically via ``commit_servable_version``.  Nothing
+        is recorded in the manifest until commit, so an abandoned staging
+        dir is reclaimed by the orphan sweep.  begin/commit pairs must be
+        serialized by the caller (``AtlasSession`` holds its publish
+        lock)."""
+        try:
+            entry = self._servable_entry(layer)
+            epoch = int(entry.get("next_epoch") or 1)
+        except KeyError:
+            epoch = 1
+        out_dir = os.path.join(self._layer_base_dir(layer), f"v{epoch:06d}")
+        tmp_dir = out_dir + ".compact"
+        if os.path.exists(tmp_dir):
+            shutil.rmtree(tmp_dir)
+        os.makedirs(tmp_dir)
+        return epoch, tmp_dir
+
+    def commit_servable_version(
+        self,
+        layer: int,
+        epoch: int,
+        tmp_dir: str,
+        files: list[str],
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+        scheduler=None,
+        published_at: float | None = None,
+    ) -> dict:
+        """Land a staged version: group-commit barrier → rename the
+        staging dir into ``v<epoch>`` → swap the manifest's
+        current-version pointer.  ``files`` are the staged spill paths
+        (inside ``tmp_dir``); their id ranges must be pairwise disjoint —
+        ``ServableLayer.open`` re-validates on first read.  With a
+        write-back ``scheduler`` every staged file plus the staging dir
+        is fsynced by one ``barrier()`` strictly before the rename, so
+        the crash ordering is data durable → rename → manifest.
+        ``published_at`` (epoch seconds) is recorded for age-based
+        retention (``retain_ttl``)."""
+        from repro.storage.io_scheduler import fsync_dir
+
+        if not files:
+            raise ValueError("cannot commit a servable version with no files")
+        out_dir = os.path.join(self._layer_base_dir(layer), f"v{epoch:06d}")
+        if scheduler is not None:
+            # group commit: every staged file (and the staging dir)
+            # durable before the version can be renamed into place
+            scheduler.barrier()
+        if os.path.exists(out_dir):  # leftover of a crashed, unrecorded publish
+            shutil.rmtree(out_dir)
+        os.replace(tmp_dir, out_dir)
+        if scheduler is not None:
+            # make the rename itself durable before the manifest
+            # records the version
+            fsync_dir(self._layer_base_dir(layer))
+            fsync_dir(self.root)
+        files = [os.path.join(out_dir, os.path.basename(p)) for p in files]
+        opened = [SpillFile.open(p) for p in files]
+        num_rows = sum(f.num_rows for f in opened)
+        info = {
+            "epoch": int(epoch),
+            "dir": out_dir,
+            "files": files,
+            "block_rows": int(block_rows),
+            "num_rows": int(num_rows),
+            "dim": opened[0].dim,
+            "dtype": str(opened[0].dtype),
+        }
+        if published_at is not None:
+            info["published_at"] = float(published_at)
+        # the entry is only created/mutated after every fallible step above
+        # succeeded, so a failed commit never leaves a phantom entry
+        entry = self._servable_entry(layer, create=True)
+        # version entry first, current pointer second: a concurrent reader
+        # that observes the new current always finds its version recorded
+        entry["versions"][str(int(epoch))] = info
+        entry["current"] = int(epoch)
+        entry["next_epoch"] = max(int(entry.get("next_epoch") or 1), int(epoch) + 1)
+        for k in ("files", "block_rows", "num_rows", "dim", "dtype"):
+            entry[k] = info[k]  # flat mirror for pre-versioning readers
+        self._write_manifest(scheduler=scheduler)
+        self._sweep_orphan_versions(layer, entry)
+        return info
+
     def publish_servable_layer(
         self,
         layer: int,
@@ -392,12 +484,16 @@ class GraphStore:
         rows_per_file: int | None = None,
         stats: IOStats | None = None,
         scheduler=None,
+        published_at: float | None = None,
     ) -> dict:
         """Compact one layer's (possibly overlapping) spill set into a new
         epoch-numbered servable version directory and swap the manifest's
         current-version pointer to it atomically.  Returns the new
         version-info dict (``epoch``, ``dir``, ``files``, ``block_rows``,
-        ``num_rows``, ``dim``, ``dtype``).
+        ``num_rows``, ``dim``, ``dtype``).  A convenience over the
+        ``begin_servable_version`` / ``commit_servable_version`` pair (the
+        distributed publish path drives those directly, one compaction per
+        shard into the shared staging dir).
 
         With a write-back ``scheduler`` the staged files stream through
         its I/O thread and the whole staged version dir is
@@ -410,17 +506,8 @@ class GraphStore:
         ``drop_servable_version`` / ``AtlasSession.publish`` for GC.
         """
         from repro.serve_gnn.servable import DEFAULT_ROWS_PER_FILE, compact_spills
-        from repro.storage.io_scheduler import fsync_dir
 
-        entry = self._servable_entry(layer, create=True)
-        epoch = int(entry.get("next_epoch") or 1)
-        out_dir = os.path.join(self._layer_base_dir(layer), f"v{epoch:06d}")
-        # compact into a staging dir and rename only on success, so a failed
-        # publish never lands a half-written version (and never touches the
-        # currently published one)
-        tmp_dir = out_dir + ".compact"
-        if os.path.exists(tmp_dir):
-            shutil.rmtree(tmp_dir)
+        epoch, tmp_dir = self.begin_servable_version(layer)
         try:
             tmp_files = compact_spills(
                 spills,
@@ -430,47 +517,20 @@ class GraphStore:
                 stats=stats,
                 scheduler=scheduler,
             )
-            if scheduler is not None:
-                # group commit: every staged file (and the staging dir)
-                # durable before the version can be renamed into place
-                scheduler.barrier()
-            if os.path.exists(out_dir):  # leftover of a crashed, unrecorded publish
-                shutil.rmtree(out_dir)
-            os.replace(tmp_dir, out_dir)
-            if scheduler is not None:
-                # make the rename itself durable before the manifest
-                # records the version
-                fsync_dir(self._layer_base_dir(layer))
-                fsync_dir(self.root)
-            files = [
-                os.path.join(out_dir, os.path.basename(p)) for p in tmp_files
-            ]
-            first = SpillFile.open(files[0])
+            return self.commit_servable_version(
+                layer,
+                epoch,
+                tmp_dir,
+                tmp_files,
+                block_rows=block_rows,
+                scheduler=scheduler,
+                published_at=published_at,
+            )
         except BaseException:
-            if not entry["versions"]:
-                # a failed FIRST publish must not leave a phantom
-                # version-less entry behind for later manifest writes
-                self.manifest.get("servable_layers", {}).pop(str(int(layer)), None)
+            # a failed publish never lands a half-written version (and
+            # never touches the currently published one)
+            shutil.rmtree(tmp_dir, ignore_errors=True)
             raise
-        info = {
-            "epoch": epoch,
-            "dir": out_dir,
-            "files": files,
-            "block_rows": int(block_rows),
-            "num_rows": spills.total_rows(),
-            "dim": first.dim,
-            "dtype": str(first.dtype),
-        }
-        # version entry first, current pointer second: a concurrent reader
-        # that observes the new current always finds its version recorded
-        entry["versions"][str(epoch)] = info
-        entry["current"] = epoch
-        entry["next_epoch"] = epoch + 1
-        for k in ("files", "block_rows", "num_rows", "dim", "dtype"):
-            entry[k] = info[k]  # flat mirror for pre-versioning readers
-        self._write_manifest()
-        self._sweep_orphan_versions(layer, entry)
-        return info
 
     _VERSION_DIR = re.compile(r"^v\d{6}(\.compact)?$")
 

@@ -63,6 +63,7 @@ class ChunkReader:
         prefetch_depth: int = 4,
         num_vertices: int | None = None,
         tracer=None,
+        vertex_range: tuple[int, int] | None = None,
     ):
         self.csr = csr
         self.spills = spills
@@ -72,6 +73,18 @@ class ChunkReader:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.prefetch_depth = prefetch_depth
         self.num_vertices = num_vertices or csr.num_vertices
+        # restrict the stream to one contiguous source-id range (shard
+        # workers: each shard reads only its own sources, still one
+        # sequential pass); default = the whole graph
+        self.vertex_range = (
+            (0, self.num_vertices) if vertex_range is None else
+            (int(vertex_range[0]), int(vertex_range[1]))
+        )
+        lo, hi = self.vertex_range
+        if not (0 <= lo <= hi <= self.num_vertices):
+            raise ValueError(
+                f"vertex_range {vertex_range} outside [0, {self.num_vertices}]"
+            )
         row_bytes = self.feat_dim * self.feat_dtype.itemsize
         self.vertices_per_chunk = max(1, chunk_bytes // max(row_bytes, 1))
         self.read_retries = 2  # straggler/transient-I/O mitigation
@@ -79,9 +92,9 @@ class ChunkReader:
 
     # ---------------------------------------------------------------- plan
     def chunk_ranges(self) -> list[tuple[int, int]]:
-        v = self.num_vertices
+        lo, hi = self.vertex_range
         step = self.vertices_per_chunk
-        return [(s, min(s + step, v)) for s in range(0, v, step)]
+        return [(s, min(s + step, hi)) for s in range(lo, hi, step)]
 
     def num_chunks(self) -> int:
         return len(self.chunk_ranges())

@@ -401,7 +401,9 @@ def test_one_scheduler_per_infer_run_shared_qstats(tmp_path, monkeypatch):
     assert len(result.metrics) == 2
     assert len(created) == 1, "infer must share one scheduler across layers"
     qstats = created[0].qstats
-    assert qstats.barriers == len(specs)  # one group commit per layer
+    # one group commit per layer, plus the run-end barrier that makes
+    # the final layer's deferred manifest fsync durable
+    assert qstats.barriers == len(specs) + 1
     assert qstats.completed == qstats.enqueued > 0
     assert qstats.dropped == 0
     # the run reclaimed its scheduler; nothing for close() to leak

@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.eviction import make_policy
 from repro.core.orchestrator import COMPLETED, HOT, NOT_STARTED, Orchestrator
 from repro.core.reorder import make_order, relabel_graph, relabel_map
-from repro.distributed.atlas_dist import build_combined_plan, build_edge_plan
+from repro.dist.mesh import build_combined_plan, build_edge_plan
 from repro.graphs.csr import degrees_from_csr
 from repro.graphs.synth import powerlaw_graph
 

@@ -49,7 +49,7 @@ def scattered_spillset(tmp, rng, num_vertices, dim, n_files, tag="sc", shift=0.0
     return ss, rows
 
 
-def serving_session(tmp_path, num_vertices):
+def serving_session(tmp_path, num_vertices, **kwargs):
     """A session over a minimal store — for publish/reader tests that
     don't need an engine run."""
     csr = CSRGraph(
@@ -62,7 +62,7 @@ def serving_session(tmp_path, num_vertices):
         np.zeros((num_vertices, 1), dtype=np.float32),
         num_partitions=1,
     )
-    return AtlasSession(store, workdir=str(tmp_path / "run"))
+    return AtlasSession(store, workdir=str(tmp_path / "run"), **kwargs)
 
 
 # --------------------------------------------------------------------------
@@ -418,6 +418,63 @@ def test_gc_retain_without_publish(tmp_path):
     removed = session.gc(1, retain=1)
     assert sorted(removed) == [1, 2]
     assert session.store.servable_versions(1) == [3, 4]
+    session.close()
+
+
+def test_publish_retain_ttl_age_based_gc(tmp_path):
+    """publish(retain_ttl=seconds): historical versions younger than the
+    TTL (by their recorded published_at) survive, older ones are
+    collected — driven by an injected clock, no sleeps."""
+    v, d = 200, 4
+    rng = np.random.default_rng(12)
+    now = [1000.0]
+    session = serving_session(tmp_path, v, clock=lambda: now[0])
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    session.publish(1, spills=ss, retain_ttl=60.0)           # epoch 1 @ t=1000
+    now[0] = 1030.0
+    session.publish(1, spills=ss, retain_ttl=60.0)           # epoch 2 @ t=1030
+    # epoch 1 is 30s old < 60s TTL -> kept
+    assert session.store.servable_versions(1) == [1, 2]
+    now[0] = 1070.0
+    p3 = session.publish(1, spills=ss, retain_ttl=60.0)      # epoch 3 @ t=1070
+    # epoch 1 is now 70s old -> collected; epoch 2 (40s) survives
+    assert p3.gc_removed == (1,)
+    assert session.store.servable_versions(1) == [2, 3]
+    # retain=N composes: the newest N unpinned historicals are exempt
+    # from the age check
+    now[0] = 2000.0
+    session.publish(1, spills=ss, retain=1, retain_ttl=60.0)
+    assert session.store.servable_versions(1) == [3, 4]
+    # on-demand gc applies the same age policy
+    now[0] = 3000.0
+    removed = session.gc(1, retain_ttl=60.0)
+    assert removed == [3]
+    assert session.store.servable_versions(1) == [4]
+    # pinned versions never age out
+    r = session.reader(1)  # pins epoch 4
+    now[0] = 9000.0
+    session.publish(1, spills=ss, retain_ttl=1.0)            # epoch 5
+    assert session.store.servable_versions(1) == [4, 5]
+    r.close()
+    session.close()
+
+
+def test_publish_retain_ttl_missing_timestamp_is_old(tmp_path):
+    """Versions published before the published_at field existed (no
+    timestamp in the manifest) count as infinitely old under a TTL."""
+    v, d = 150, 4
+    rng = np.random.default_rng(13)
+    now = [500.0]
+    session = serving_session(tmp_path, v, clock=lambda: now[0])
+    ss, _ = scattered_spillset(tmp_path, rng, v, d, n_files=2)
+    p1 = session.publish(1, spills=ss)
+    # simulate a pre-TTL-era manifest entry: drop its published_at
+    info = session.store.servable_version_info(1, p1.epoch)
+    info.pop("published_at", None)
+    session.store._write_manifest()
+    p2 = session.publish(1, spills=ss, retain_ttl=1e9)
+    assert p2.gc_removed == (p1.epoch,)
+    assert session.store.servable_versions(1) == [p2.epoch]
     session.close()
 
 
