@@ -5,14 +5,27 @@ across overlapping sorted files), publishes it through the
 ``AtlasSession`` lifecycle (versioned compaction into block-indexed
 servable files), then measures pinned ``session.reader`` lookups under
 uniform and Zipfian batched workloads across a sweep of page-cache
-budgets (0 = cache disabled).  Reports queries/s, rows/s, cache hit
-rate, and disk blocks read, as JSON with ``--json``.
+budgets (0 = cache disabled) plus one **zero-copy mmap fast-path** row
+per workload (``fast_path=True``: rows gathered straight from the file
+mmaps, the OS page cache is the cache).  Reports queries/s, rows/s,
+cache hit rate, disk blocks read, and the reader's cache counters as
+seen through the obs ``MetricsRegistry``, as JSON with ``--json``.
 
 ``--concurrent N`` switches to the MVCC smoke mode instead: N reader
 threads hammer ``session.reader(...).lookup`` while the main thread
 re-publishes the layer in a loop with alternating row contents; every
 batch is checked bit-for-bit against the reader's pinned version, so any
 mixed-version or missing row fails the run.
+
+``--processes 1,2,4`` runs the multi-process serving benchmark: for
+each reader count, that many *forked processes* each open their own
+``AtlasSession`` over the shared store (pinning via cross-process
+leases), verify their first batches bit-for-bit against a
+``fast_path=False`` oracle reader, then run the timed workload with a
+per-reader latency histogram — merged in the parent into aggregate
+p50/p99 (``Histogram.to_state`` crosses the pipe) alongside aggregate
+q/s.  ``--target-qps`` paces each reader on a fixed schedule instead of
+running flat out.
 
 ``--orderings og,rnd,at`` switches to the layout-sensitivity mode: one
 real graph store per ordering (``GraphStore.create(order=...)``), the
@@ -40,6 +53,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import multiprocessing
 import os
 import tempfile
 import threading
@@ -49,7 +63,7 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.graphs.synth import make_features, powerlaw_graph
-from repro.obs.metrics import Histogram
+from repro.obs.metrics import Histogram, MetricsRegistry
 from repro.session import AtlasSession
 from repro.storage.iostats import IOStats
 from repro.storage.layout import GraphStore
@@ -134,9 +148,12 @@ def run_workload(
     cache_bytes: int,
     num_shards: int,
     warm_batches: int,
+    fast_path: bool | str = False,
 ) -> dict:
+    registry = MetricsRegistry()
     with session.reader(
-        SERVE_LAYER, cache_bytes=cache_bytes, num_shards=num_shards
+        SERVE_LAYER, cache_bytes=cache_bytes, num_shards=num_shards,
+        fast_path=fast_path, metrics=registry,
     ) as eng:
         for q in queries[:warm_batches]:
             eng.lookup(q)
@@ -150,6 +167,7 @@ def run_workload(
         seconds = time.perf_counter() - t0
         rec = {
             "cache_mb": cache_bytes / (1 << 20),
+            "fast_path": eng.fast_path,
             "batches": len(timed),
             "batch": queries.shape[1],
             "seconds": round(seconds, 4),
@@ -163,6 +181,11 @@ def run_workload(
         if eng.cache is not None:
             rec["hit_rate"] = round(eng.cache.hit_rate(), 4)
             rec["resident_mb"] = round(eng.cache.resident_bytes / (1 << 20), 2)
+            # the same counters as exported through the obs registry
+            # (what obs_report / CI artifacts consume)
+            rec["cache_counters"] = (
+                registry.snapshot().get("serve", {}).get("cache", {})
+            )
     return rec
 
 
@@ -276,6 +299,180 @@ def run_concurrent(
 
 
 # --------------------------------------------------------------------------
+# Multi-process mode (ISSUE 10): N forked reader processes, each with its
+# own AtlasSession over the shared store (cross-process lease pins), each
+# verified against the fast_path=False oracle, latency histograms merged
+# in the parent.
+# --------------------------------------------------------------------------
+
+
+def _mp_reader_worker(store_root: str, conn, cfg: dict, barrier) -> None:
+    """One benchmark reader process: open a session over the shared
+    store, verify the first batches bit-for-bit against the page-cache
+    oracle, warm up, rendezvous on ``barrier`` so every reader's timed
+    loop overlaps, then run the timed workload.  Ships its counters and
+    the latency histogram state back over ``conn``."""
+    out: dict = {"pid": os.getpid(), "mismatches": 0, "error": None}
+    try:
+        queries = make_workload(
+            cfg["workload"], cfg["vertices"],
+            cfg["batches"] + cfg["warm_batches"], cfg["batch"],
+            cfg["alpha"], cfg["seed"],
+        )
+        with AtlasSession(store_root) as session:
+            with session.reader(
+                SERVE_LAYER,
+                cache_bytes=cfg["cache_bytes"] or None,
+                num_shards=cfg["shards"],
+                fast_path=cfg["fast_path"],
+            ) as eng:
+                # bit-identity vs the decoded-block oracle, outside the
+                # timed loop (oracle reads are the slow path by design)
+                if cfg["verify_batches"]:
+                    with session.reader(
+                        SERVE_LAYER, fast_path=False
+                    ) as oracle:
+                        for q in queries[: cfg["verify_batches"]]:
+                            if not np.array_equal(
+                                eng.lookup(q), oracle.lookup(q)
+                            ):
+                                out["mismatches"] += 1
+                out["verified_batches"] = int(cfg["verify_batches"])
+                for q in queries[: cfg["warm_batches"]]:
+                    eng.lookup(q)
+                barrier.wait(timeout=120)
+                timed = queries[cfg["warm_batches"]:]
+                hist = Histogram()
+                interval = (
+                    1.0 / cfg["target_qps"] if cfg["target_qps"] > 0 else 0.0
+                )
+                busy = 0.0
+                t0 = time.perf_counter()
+                for k, q in enumerate(timed):
+                    if interval:
+                        # fixed schedule (no coordinated omission: late
+                        # batches do not push later ones back)
+                        due = t0 + k * interval
+                        delay = due - time.perf_counter()
+                        if delay > 0:
+                            time.sleep(delay)
+                    b0 = time.perf_counter()
+                    eng.lookup(q)
+                    dt = time.perf_counter() - b0
+                    busy += dt
+                    hist.observe(dt)
+                out.update(
+                    wall_s=time.perf_counter() - t0,
+                    busy_s=busy,
+                    lookups=len(timed),
+                    rows=int(len(timed) * cfg["batch"]),
+                    fast_path=bool(eng.fast_path),
+                    version=int(eng.version),
+                    disk_blocks_read=int(eng.blocks_read),
+                    hist=hist.to_state(),
+                )
+    except BaseException as e:  # noqa: BLE001 - report, parent raises
+        out["error"] = f"{type(e).__name__}: {e}"
+    conn.send(out)
+    conn.close()
+
+
+def run_multiprocess(td: str, args) -> dict:
+    """Fork-per-reader serving benchmark across ``--processes`` counts."""
+    root = os.path.join(td, "mp")
+    session = make_session(root, args.vertices)
+    ss, _ = build_spillset(
+        os.path.join(root, "raw"), args.vertices, args.dim,
+        args.raw_files, args.seed,
+    )
+    session.publish(SERVE_LAYER, spills=ss, block_rows=args.block_rows,
+                    rows_per_file=args.rows_per_file)
+    store_root = session.store.root
+    session.close()  # children open their own sessions over the store
+
+    fast = {"auto": "auto", "true": True, "false": False}[args.mp_fast_path]
+    counts = [int(x) for x in args.processes.split(",")]
+    ctx = multiprocessing.get_context("fork")
+    sweep = []
+    for n in counts:
+        pipes, procs = [], []
+        barrier = ctx.Barrier(n)  # aligns every reader's timed window
+        t0 = time.perf_counter()
+        for i in range(n):
+            cfg = {
+                "workload": args.mp_workload,
+                "vertices": args.vertices,
+                "dim": args.dim,
+                "batch": args.batch,
+                "batches": args.batches,
+                "warm_batches": args.warm_batches,
+                "alpha": args.zipf_alpha,
+                "seed": args.seed + 100 + i,
+                "cache_bytes": int(args.cache_mb_concurrent * (1 << 20)),
+                "shards": args.shards,
+                "fast_path": fast,
+                "verify_batches": args.verify_batches,
+                "target_qps": args.target_qps,
+            }
+            parent_conn, child_conn = ctx.Pipe(duplex=False)
+            p = ctx.Process(
+                target=_mp_reader_worker,
+                args=(store_root, child_conn, cfg, barrier),
+                daemon=True,
+            )
+            p.start()
+            child_conn.close()
+            pipes.append(parent_conn)
+            procs.append(p)
+        reports = [c.recv() for c in pipes]
+        for p in procs:
+            p.join(timeout=120)
+        wall = time.perf_counter() - t0
+        errors = [r["error"] for r in reports if r["error"]]
+        if errors:
+            raise AssertionError(f"multi-process readers failed: {errors}")
+        mismatches = sum(r["mismatches"] for r in reports)
+        if mismatches:
+            raise AssertionError(
+                f"{mismatches} batches diverged from the fast_path=False "
+                f"oracle across {n} reader processes"
+            )
+        merged = Histogram()
+        for r in reports:
+            merged.merge(Histogram.from_state(r["hist"]))
+        lookups = sum(r["lookups"] for r in reports)
+        # aggregate throughput over the concurrent measurement window:
+        # the slowest reader's timed loop (startup/fork/publish overhead
+        # is reported separately as total_wall_s)
+        window = max(r["wall_s"] for r in reports)
+        rec = {
+            "processes": n,
+            "fast_path": reports[0]["fast_path"],
+            "workload": args.mp_workload,
+            "target_qps": args.target_qps,
+            "lookups": lookups,
+            "rows": sum(r["rows"] for r in reports),
+            "verified_batches": sum(r["verified_batches"] for r in reports),
+            "wall_s": round(window, 3),
+            "total_wall_s": round(wall, 3),
+            "queries_per_s": round(lookups / window, 1),
+            "per_reader_qps": round(
+                sum(r["lookups"] / r["busy_s"] for r in reports if r["busy_s"])
+                / n, 1,
+            ),
+            "disk_blocks_read": sum(r["disk_blocks_read"] for r in reports),
+            "latency": latency_ms(merged),
+        }
+        sweep.append(rec)
+        lat = rec["latency"]
+        print(f"  processes={n:<3d} fast_path={rec['fast_path']!s:<5} "
+              f"{rec['queries_per_s']:>10.1f} q/s agg  "
+              f"p50={lat['p50_ms']:.3f}ms p99={lat['p99_ms']:.3f}ms  "
+              f"({rec['verified_batches']} batches oracle-verified)")
+    return {"sweep": sweep, "store_root": store_root}
+
+
+# --------------------------------------------------------------------------
 # Ordering mode (ISSUE 8): same rows, same external-id workload, three
 # physical layouts — how much page-cache hit rate does the store ordering
 # buy on a hub-heavy (popularity-Zipf) serving workload?
@@ -343,6 +540,20 @@ def main():
                     help="per-reader cache budget in --concurrent mode")
     ap.add_argument("--drain-seconds", type=float, default=1.0,
                     help="reader time against the final version before stop")
+    ap.add_argument("--processes", default="", metavar="1,2,4",
+                    help="multi-process mode: comma-separated reader-process "
+                         "counts, each forked with its own AtlasSession")
+    ap.add_argument("--mp-workload", default="zipf",
+                    choices=("zipf", "uniform"),
+                    help="workload kind in --processes mode")
+    ap.add_argument("--mp-fast-path", default="true",
+                    choices=("auto", "true", "false"),
+                    help="serving path in --processes mode")
+    ap.add_argument("--target-qps", type=float, default=0.0,
+                    help="per-reader pacing in --processes mode (0 = flat out)")
+    ap.add_argument("--verify-batches", type=int, default=8,
+                    help="batches each process checks against the "
+                         "fast_path=False oracle before timing")
     ap.add_argument("--orderings", default="", metavar="OG,RND,AT",
                     help="layout mode: comma-separated store orderings to "
                          "compare under a popularity workload (skips the "
@@ -374,6 +585,28 @@ def main():
                     json.dump(results, f, indent=2)
                 print(f"wrote {args.json}")
             return
+        if args.processes:
+            print(f"multi-process mode: V={args.vertices} d={args.dim} "
+                  f"processes={args.processes} workload={args.mp_workload} "
+                  f"fast_path={args.mp_fast_path}"
+                  + (f" target_qps={args.target_qps}" if args.target_qps
+                     else ""))
+            mp_res = run_multiprocess(td, args)
+            results["processes"] = mp_res["sweep"]
+            qps = [r["queries_per_s"] for r in mp_res["sweep"]]
+            if len(qps) > 1:
+                results["process_scaling"] = {
+                    str(r["processes"]): r["queries_per_s"]
+                    for r in mp_res["sweep"]
+                }
+                print(f"  aggregate scaling: "
+                      + " -> ".join(f"{q:.0f}" for q in qps) + " q/s")
+            if args.concurrent <= 0:
+                if args.json:
+                    with open(args.json, "w") as f:
+                        json.dump(results, f, indent=2)
+                    print(f"wrote {args.json}")
+                return
         session = make_session(td, args.vertices)
         if args.concurrent > 0:
             print(f"concurrent smoke: V={args.vertices} d={args.dim} "
@@ -447,14 +680,37 @@ def main():
                           f"p95={lat['p95_ms']:.3f}ms "
                           f"p99={lat['p99_ms']:.3f}ms  "
                           f"blocks_read={rec['disk_blocks_read']:<8d} {extra}")
+                # one zero-copy mmap fast-path row per workload: same
+                # queries, rows gathered straight from the file mmaps
+                fast = run_workload(
+                    session, queries, 0, args.shards, args.warm_batches,
+                    fast_path=True,
+                )
+                rows.append(fast)
+                lat = fast["latency"]
+                print(f"  {kind:<8} mmap fast-path "
+                      f"{fast['queries_per_s']:>10.1f} q/s  "
+                      f"{fast['rows_per_s']:>12.1f} rows/s  "
+                      f"p50={lat['p50_ms']:.3f}ms "
+                      f"p95={lat['p95_ms']:.3f}ms "
+                      f"p99={lat['p99_ms']:.3f}ms")
                 results[kind] = rows
-                base = next((r for r in rows if r["cache_mb"] == 0), None)
-                best = max(rows, key=lambda r: r["queries_per_s"])
+                base = next(
+                    (r for r in rows
+                     if r["cache_mb"] == 0 and not r["fast_path"]), None,
+                )
+                cached = [r for r in rows if not r["fast_path"]]
+                best = max(cached, key=lambda r: r["queries_per_s"])
                 if base is not None and best is not base:
                     speedup = best["queries_per_s"] / base["queries_per_s"]
                     results[f"{kind}_speedup_vs_no_cache"] = round(speedup, 2)
                     print(f"  {kind}: warm-cache speedup vs cache-off: "
                           f"{speedup:.1f}x")
+                ratio = (fast["queries_per_s"] / best["queries_per_s"]
+                         if best["queries_per_s"] else 0.0)
+                results[f"{kind}_fast_path_vs_best_cache"] = round(ratio, 2)
+                print(f"  {kind}: mmap fast-path vs best page-cache: "
+                      f"{ratio:.2f}x")
         session.close()
     if args.json:
         with open(args.json, "w") as f:

@@ -295,6 +295,48 @@ def _load_layer_metrics(path: str) -> list[dict]:
     return find(data) or []
 
 
+def _find_cache_counters(path: str) -> list[dict]:
+    """Serving page-cache counter dicts from a telemetry/bench JSON: any
+    ``serve.cache`` registry subtree (MetricsRegistry snapshot) or
+    ``cache_counters`` record (bench_serve rows), wherever it nests."""
+    with open(path) as f:
+        data = json.load(f)
+    found: list[dict] = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            cache = node.get("serve", {})
+            if isinstance(cache, dict) and isinstance(
+                cache.get("cache"), dict
+            ):
+                found.append(cache["cache"])
+            if isinstance(node.get("cache_counters"), dict):
+                found.append(node["cache_counters"])
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, list):
+            for v in node:
+                walk(v)
+
+    walk(data)
+    return found
+
+
+def _print_cache_counters(counters: list[dict], out=sys.stdout) -> None:
+    p = lambda *a: print(*a, file=out)  # noqa: E731
+    p(f"\nserve cache ({len(counters)} reader(s)):")
+    for i, c in enumerate(counters):
+        hits = float(c.get("hits", 0))
+        misses = float(c.get("misses", 0))
+        total = hits + misses
+        rb = c.get("resident_bytes", {})
+        resident = rb.get("value", 0.0) if isinstance(rb, dict) else rb
+        p(f"  [{i}] hits={int(hits)} misses={int(misses)} "
+          f"hit_rate={hits / total if total else 0.0:.4f} "
+          f"evicted={int(float(c.get('evicted_blocks', 0)))} "
+          f"resident={float(resident) / (1 << 20):.2f}MiB")
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         description="Per-layer phase breakdown from an ATLAS trace.json"
@@ -323,6 +365,10 @@ def main(argv: list[str] | None = None) -> int:
         for v in violations[:20]:
             print(f"  {v}", file=sys.stderr)
     if args.telemetry:
+        cache_counters = _find_cache_counters(args.telemetry)
+        if cache_counters:
+            _print_cache_counters(cache_counters)
+            report["serve_cache"] = cache_counters
         layer_metrics = _load_layer_metrics(args.telemetry)
         if not layer_metrics:
             print(f"\nwarning: no LayerMetrics found in {args.telemetry}; "

@@ -143,6 +143,33 @@ class Histogram:
         with self._lock:
             return self._count
 
+    def to_state(self) -> dict:
+        """Plain-dict dump of the histogram (bucket layout + counts).
+        Picklable/JSON-safe — the ``threading.Lock`` inside a live
+        ``Histogram`` is not — so per-process histograms can cross a
+        multiprocessing pipe and be merged in the parent."""
+        with self._lock:
+            return {
+                "base": self.base,
+                "growth": self.growth,
+                "counts": list(self.counts),
+                "count": self._count,
+                "sum": self._sum,
+                "min": self._min,
+                "max": self._max,
+            }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "Histogram":
+        h = cls(base=float(state["base"]), growth=float(state["growth"]),
+                num_buckets=len(state["counts"]) - 1)
+        h.counts = [int(c) for c in state["counts"]]
+        h._count = int(state["count"])
+        h._sum = float(state["sum"])
+        h._min = float(state["min"])
+        h._max = float(state["max"])
+        return h
+
     def quantile(self, q: float) -> float:
         """Estimate the q-quantile (0..1) by linear interpolation inside
         the bucket containing the target rank.  Exact observed min/max

@@ -76,6 +76,8 @@ class ShardedPageCache:
         num_shards: int = 4,
         stats: IOStats | None = None,
         tracer=None,
+        metrics=None,
+        metrics_prefix: str = "serve.cache",
     ):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
@@ -89,6 +91,25 @@ class ShardedPageCache:
         self.hits = 0
         self.misses = 0
         self.evicted_blocks = 0
+        # optional obs.MetricsRegistry export: hit/miss/eviction counters
+        # plus resident-bytes/blocks gauges under `<prefix>.*`
+        self._m_hits = self._m_misses = self._m_evicted = None
+        self._m_resident_bytes = self._m_resident_blocks = None
+        if metrics is not None:
+            self.bind_metrics(metrics, prefix=metrics_prefix)
+
+    def bind_metrics(self, registry, prefix: str = "serve.cache") -> None:
+        """Mirror the cache counters into an ``obs.MetricsRegistry`` so
+        runs that already snapshot a registry (``obs_report``,
+        ``bench_serve`` JSON) see cache behavior without reaching into
+        the cache object: ``<prefix>.hits|misses|evicted_blocks``
+        counters and ``<prefix>.resident_bytes|resident_blocks``
+        gauges, updated on every ``get_many``/``put_many``."""
+        self._m_hits = registry.counter(f"{prefix}.hits")
+        self._m_misses = registry.counter(f"{prefix}.misses")
+        self._m_evicted = registry.counter(f"{prefix}.evicted_blocks")
+        self._m_resident_bytes = registry.gauge(f"{prefix}.resident_bytes")
+        self._m_resident_blocks = registry.gauge(f"{prefix}.resident_blocks")
 
     # -------------------------------------------------------------- read
     def get_many(self, keys: np.ndarray) -> list[Block | None]:
@@ -122,6 +143,9 @@ class ShardedPageCache:
         with self._counter_lock:
             self.hits += hits
             self.misses += len(keys) - hits
+        if self._m_hits is not None:
+            self._m_hits.inc(hits)
+            self._m_misses.inc(len(keys) - hits)
         if hit_bytes:
             self.stats.add_read(hit_bytes)
         if tr.enabled:
@@ -158,8 +182,13 @@ class ShardedPageCache:
                 evicted = shard.evict_to_budget()
             with self._counter_lock:
                 self.evicted_blocks += evicted
+            if self._m_evicted is not None and evicted:
+                self._m_evicted.inc(evicted)
         if admitted_bytes:
             self.stats.add_write(admitted_bytes)
+        if self._m_resident_bytes is not None:
+            self._m_resident_bytes.set(float(self.resident_bytes))
+            self._m_resident_blocks.set(float(self.resident_blocks))
         if tr.enabled:
             tr.end("cache_put", "serve")
 

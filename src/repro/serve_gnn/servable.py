@@ -125,6 +125,7 @@ class ServableLayer:
     file_block_rows: np.ndarray = None  # i64 [n_files], per-file block size
     epoch: int | None = None  # published version this view was opened at
     _id_cols: list = dataclasses.field(default=None, repr=False)
+    _row_views: list = dataclasses.field(default=None, repr=False)
     _id_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False
     )
@@ -186,12 +187,32 @@ class ServableLayer:
         return view
 
     def close(self) -> None:
-        """Drop the lazily-opened id-column mmaps (and their fds).  The
-        view stays usable; columns re-open on next use."""
+        """Drop the lazily-opened id-column and row mmaps (and their
+        fds).  The view stays usable; mappings re-open on next use."""
         with self._id_lock:
             self._id_cols = None
+            self._row_views = None
+
+    @property
+    def data_nbytes(self) -> int:
+        """Total bytes of row data across the layer's files — what the
+        zero-copy fast path would map (and, warm, what the OS page cache
+        holds).  Used to auto-select the fast path when a version fits
+        the serving memory budget."""
+        return self.num_rows * self.dim * self.dtype.itemsize
 
     # ------------------------------------------------------------ lookup
+    def locate_files(self, unique_ids: np.ndarray) -> np.ndarray:
+        """Per-id index of the only file whose [min, max] id range can
+        contain it, or -1 (a definitive miss without touching disk).
+        One vectorised binary search over the sorted file bounds."""
+        uids = np.asarray(unique_ids, dtype=np.uint64)
+        f = np.searchsorted(self.file_max, uids, side="left").astype(np.int64)
+        in_file = f < len(self.files)
+        in_file[in_file] &= uids[in_file] >= self.file_min[f[in_file]]
+        f[~in_file] = -1
+        return f
+
     def locate(self, unique_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Map sorted unique vertex ids to (file index, global block key).
 
@@ -201,10 +222,8 @@ class ServableLayer:
         the block's id column, checked after the block is fetched.
         """
         uids = np.asarray(unique_ids, dtype=np.uint64)
-        f = np.searchsorted(self.file_max, uids, side="left").astype(np.int64)
-        in_file = f < len(self.files)
-        in_file[in_file] &= uids[in_file] >= self.file_min[f[in_file]]
-        f[~in_file] = -1
+        f = self.locate_files(uids)
+        in_file = f >= 0
         gkey = np.full(len(uids), -1, dtype=np.int64)
         for fi in np.unique(f[in_file]).tolist():
             sel = f == fi
@@ -226,6 +245,24 @@ class ServableLayer:
                 col = self.files[fi].ids_mmap()
                 self._id_cols[fi] = col
             return col
+
+    def rows_mmap(self, fi: int, madvise_willneed: bool = False) -> np.ndarray:
+        """The full ``[rows, dim]`` data section of file ``fi`` as a
+        lazily-opened, memory-mapped view (one mapping per file, cached
+        on the layer like ``file_ids``).  The zero-copy serving fast
+        path fancy-indexes requested rows directly out of this view —
+        warm pages are served from the OS page cache with no pread, no
+        block decode, and no second in-process copy."""
+        with self._id_lock:
+            if self._row_views is None:
+                self._row_views = [None] * len(self.files)
+            view = self._row_views[fi]
+            if view is None:
+                view = self.files[fi].rows_mmap(
+                    madvise_willneed=madvise_willneed
+                )
+                self._row_views[fi] = view
+            return view
 
     def locate_rows(self, unique_ids: np.ndarray, f: np.ndarray) -> np.ndarray:
         """Absolute row position of each id within its file, or -1.

@@ -1,3 +1,5 @@
-"""Batched LM serving engine."""
+"""Serving front-ends: the batched LM engine and the embedding-lookup
+batching frontend (waves of coalesced ``reader.lookup`` calls)."""
 
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.frontend import LookupFuture, ServingFrontend  # noqa: F401

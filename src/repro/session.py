@@ -21,8 +21,16 @@ current-version pointer atomically; version directories are immutable.
 concurrent re-publish never changes or deletes rows under a live reader;
 unpinned stale versions are garbage-collected on the next publish —
 all of them by default, or all but the newest ``retain=N`` historical
-ones (pinned versions never count against the budget).  Pins are
-per-session, in-process state — one publishing session per store.
+ones (pinned versions never count against the budget).
+
+Pins are visible **across processes**: besides the in-process refcount,
+every reader drops a heartbeated lease file under its pinned version
+directory (``repro.serve_gnn.leases``), and ``publish``/``gc`` honor any
+version with a live lease exactly like a local pin — so several serving
+processes can read one store while one session publishes and collects.
+A lease whose process died is reaped after its TTL; readers dropped
+without ``close()`` are backstopped by a ``weakref`` finalizer.  Run one
+*publishing* session per store; open as many reading sessions as needed.
 
 Durability: with ``AtlasConfig.io_impl="writeback"`` (default) the
 session owns a write-back I/O scheduler; publishes stream staged files
@@ -44,18 +52,26 @@ thin deprecation shims over this API.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import os
 import shutil
 import threading
 import time
+import weakref
 
 from repro.core.atlas import AtlasConfig, AtlasEngine, LayerMetrics
 from repro.graphs.csr import degrees_from_csr
 from repro.models.gnn import GNNLayerSpec
 from repro.obs.sampler import ResourceSampler
 from repro.obs.trace import as_tracer
+from repro.serve_gnn.leases import (
+    DEFAULT_LEASE_TTL,
+    PinLease,
+    live_leases,
+    store_lock,
+)
 from repro.serve_gnn.page_cache import ShardedPageCache
 from repro.serve_gnn.query import VertexQueryEngine
 from repro.serve_gnn.servable import ServableLayer
@@ -267,12 +283,30 @@ class PublishedVersion:
 # --------------------------------------------------------------------------
 
 
+def _finalize_reader(session: "AtlasSession", layer: int, epoch: int, lease):
+    """Backstop for a reader dropped without ``close()`` (a crashed
+    worker thread, a leaked reference): runs when the garbage collector
+    reclaims the reader.  The cross-process lease is released inline
+    (file ops only), but the in-process unpin is *queued* — a finalizer
+    can fire mid-allocation on a thread that already holds the session
+    lock, so taking it here could deadlock.  The queue drains at the
+    session's next lock acquisition (``reader``/``publish``/``gc``/
+    ``close``)."""
+    if lease is not None:
+        lease.release(join=False)
+    session._pending_unpins.append((layer, epoch))
+
+
 class SessionReader(VertexQueryEngine):
     """A ``VertexQueryEngine`` pinned to one published version.
 
-    The pin (a per-session refcount) keeps the version's files on disk
-    across re-publishes; ``close`` releases it, after which the version is
-    collectable on the next publish.  Use as a context manager.
+    The pin — an in-process refcount plus an on-disk heartbeated lease
+    visible to other processes — keeps the version's files on disk
+    across re-publishes; ``close`` releases both, after which the
+    version is collectable on the next publish.  Use as a context
+    manager; a reader dropped without ``close()`` is unpinned by a
+    ``weakref`` finalizer when the garbage collector reclaims it, so a
+    leaked reader can never pin a version forever.
 
     Lookups take **external** (original) vertex ids: when the store was
     built with a non-identity ordering the session passes the mmapped
@@ -292,21 +326,30 @@ class SessionReader(VertexQueryEngine):
         tracer=None,
         id_map=None,
         id_unmap=None,
+        lease: PinLease | None = None,
+        fast_path: bool = False,
     ):
         super().__init__(
             servable, cache=cache, stats=stats, tracer=tracer,
-            id_map=id_map, id_unmap=id_unmap,
+            id_map=id_map, id_unmap=id_unmap, fast_path=fast_path,
         )
         self._session = session
         self.layer_index = layer_index
         self.version = epoch
+        self._lease = lease
         self._closed = False
+        self._finalizer = weakref.finalize(
+            self, _finalize_reader, session, layer_index, epoch, lease
+        )
 
     def close(self) -> None:
         if self._closed:
             return
         self._closed = True
-        self.layer.close()  # drop id-column mmaps
+        self._finalizer.detach()  # this close supersedes the GC backstop
+        self.layer.close()  # drop id-column/row mmaps
+        if self._lease is not None:
+            self._lease.release()
         self._session._release(self.layer_index, self.version)
 
     def __enter__(self) -> "SessionReader":
@@ -338,6 +381,7 @@ class AtlasSession:
         engine: AtlasEngine | None = None,
         trace=None,
         clock=None,
+        lease_ttl: float = DEFAULT_LEASE_TTL,
     ):
         self.store = GraphStore.open(store) if isinstance(store, str) else store
         self.engine = engine if engine is not None else AtlasEngine(config)
@@ -345,6 +389,10 @@ class AtlasSession:
         # injectable time source (epoch seconds): publish timestamps and
         # the retain_ttl retention clock — tests pin it
         self._clock = clock if clock is not None else time.time
+        # cross-process pin leases: readers heartbeat at lease_ttl/4;
+        # gc treats a lease as stale (reapable) once its mtime is older
+        # than lease_ttl AND its pid is dead
+        self._lease_ttl = float(lease_ttl)
         # trace: None defers to AtlasConfig.trace; True/False overrides
         # it; a Tracer instance is used directly (one timeline can span
         # several sessions/runs)
@@ -354,7 +402,12 @@ class AtlasSession:
         self._lock = threading.Lock()  # pins + manifest reads + GC
         self._publish_lock = threading.Lock()  # serializes publishes
         self._pins: dict[tuple[int, int], int] = {}  # (layer, epoch) -> count
-        self._readers: list[SessionReader] = []
+        # weak refs: a strong list would keep dropped readers alive and
+        # their finalizer backstop could never fire
+        self._readers: list[weakref.ref] = []
+        # (layer, epoch) pins released by reader finalizers, applied at
+        # the next lock acquisition (deque.append is atomic + lock-free)
+        self._pending_unpins: collections.deque = collections.deque()
         self._published_layers: set[int] = set()
         self._last_result: RunResult | None = None
         self._session_closed = False
@@ -384,14 +437,27 @@ class AtlasSession:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def _drain_finalized(self) -> None:
+        """Apply pins queued by reader finalizers (see
+        ``_finalize_reader``) — called before every pin/GC decision."""
+        while True:
+            try:
+                layer, epoch = self._pending_unpins.popleft()
+            except IndexError:
+                return
+            self._release(layer, epoch)
+
     def close(self) -> None:
         """Close any still-open readers and collect stale versions of the
         layers this session published.  Further ``reader`` calls raise."""
+        self._drain_finalized()
         with self._lock:
             self._session_closed = True
-            readers, self._readers = self._readers, []
-        for r in readers:
-            r.close()
+            refs, self._readers = self._readers, []
+        for ref in refs:
+            r = ref()
+            if r is not None:
+                r.close()
         for layer in sorted(self._published_layers):
             self.gc(layer)
         if self._io_sched is not None:
@@ -624,6 +690,7 @@ class AtlasSession:
         The default ``retain=0, retain_ttl=None`` keeps the original
         collect-everything-stale behavior."""
         handle = self._resolve(layer, spills)
+        self._drain_finalized()
         with self._publish_lock:
             scheduler = self._publish_scheduler()
             try:
@@ -687,6 +754,7 @@ class AtlasSession:
         reader pins, keeping the newest ``retain`` unpinned ones and any
         unpinned version younger than ``retain_ttl`` seconds.
         Returns the collected epoch numbers."""
+        self._drain_finalized()
         with self._publish_lock:  # never concurrent with a manifest write
             return self._gc_locked(layer, retain=retain, retain_ttl=retain_ttl)
 
@@ -695,12 +763,16 @@ class AtlasSession:
     ) -> list[int]:
         """GC body; caller holds ``_publish_lock``.
 
-        Only the manifest retirement happens under the pin lock; the
-        (potentially large) file deletion runs after it is released, so
-        concurrent ``reader`` opens never stall on disk I/O."""
+        The retirement *decision* runs under the cross-process store
+        lock: stale leases are reaped, and any version with a surviving
+        lease — a reader pinned in another process — is skipped exactly
+        like a locally pinned one.  Only the manifest retirement happens
+        under the locks; the (potentially large) file deletion runs
+        after both are released, so concurrent ``reader`` opens never
+        stall on disk I/O."""
         retain = max(0, int(retain))
         now = self._clock() if retain_ttl is not None else None
-        with self._lock:
+        with store_lock(self.store.root), self._lock:
             try:
                 current = self.store.current_servable_epoch(layer)
             except KeyError:
@@ -712,15 +784,19 @@ class AtlasSession:
             for epoch in sorted(self.store.servable_versions(layer), reverse=True):
                 if epoch == current or self._pins.get((layer, epoch)):
                     continue
+                info_v = self.store.servable_version_info(layer, epoch)
+                # cross-process pins: reap dead readers' stale leases,
+                # honor every surviving one (never counts against the
+                # retain budget, mirroring local pins)
+                if live_leases(info_v["dir"], ttl=self._lease_ttl):
+                    continue
                 if kept_unpinned < retain:
                     kept_unpinned += 1
                     continue
                 if retain_ttl is not None:
                     # versions predating publish timestamps (no
                     # published_at recorded) count as infinitely old
-                    published_at = self.store.servable_version_info(
-                        layer, epoch
-                    ).get("published_at")
+                    published_at = info_v.get("published_at")
                     if (
                         published_at is not None
                         and now - float(published_at) < retain_ttl
@@ -743,33 +819,77 @@ class AtlasSession:
         cache_bytes: int | None = None,
         num_shards: int = 4,
         stats: IOStats | None = None,
+        fast_path: bool | str = "auto",
+        metrics=None,
     ) -> SessionReader:
         """A query engine pinned to the version of ``layer`` current at
         this call (or an explicit still-on-disk ``epoch``).  The pinned
-        version survives re-publishes until the reader is closed.
-        Lookups take external (original) vertex ids; reordered stores
-        translate through their permutation sidecar transparently.
+        version survives re-publishes — by any process — until the
+        reader is closed.  Lookups take external (original) vertex ids;
+        reordered stores translate through their permutation sidecar
+        transparently.
+
+        ``fast_path`` selects the zero-copy mmap serving path: ``True``
+        gathers rows straight from the version's file mmaps (the OS page
+        cache is the cache — no ``ShardedPageCache``), ``False`` forces
+        the decoded-block page-cache path (the bit-identity oracle), and
+        ``"auto"`` (default) picks the mmap path when the version's data
+        fits the ``cache_bytes`` budget and no explicit ``cache`` was
+        passed — the whole working set would be cache-resident anyway,
+        so serving the mapping directly skips the decode + copy.
 
         ``cache_bytes`` builds a fresh per-reader ``ShardedPageCache``;
         pass ``cache`` only to share one across readers of the *same*
         version — block keys are per-version, so a cache must never
-        outlive the version it was filled from."""
+        outlive the version it was filled from.  ``metrics`` (an
+        ``obs.MetricsRegistry``) exports the cache's hit/miss/eviction
+        counters and resident gauges under ``serve.cache.*``."""
         layer = int(layer)
-        with self._lock:
-            if self._session_closed:
-                raise RuntimeError("AtlasSession is closed")
-            info = self.store.servable_version_info(layer, epoch)
-            e = int(info["epoch"])
-            self._pins[(layer, e)] = self._pins.get((layer, e), 0) + 1
+        if fast_path is True and cache is not None:
+            raise ValueError(
+                "fast_path=True serves from file mmaps and never consults "
+                "a page cache; pass cache/cache_bytes or fast_path, not both"
+            )
+        self._drain_finalized()
+        # pin + lease under the cross-process store lock: GC in another
+        # process decides retirement under the same lock, so it can never
+        # delete the version between us reading the manifest and the
+        # lease landing on disk
+        with store_lock(self.store.root):
+            with self._lock:
+                if self._session_closed:
+                    raise RuntimeError("AtlasSession is closed")
+                # pick up versions published by other processes
+                self.store.reload_manifest()
+                info = self.store.servable_version_info(layer, epoch)
+                e = int(info["epoch"])
+                self._pins[(layer, e)] = self._pins.get((layer, e), 0) + 1
+            try:
+                lease = PinLease(info["dir"], ttl=self._lease_ttl)
+            except BaseException:
+                self._release(layer, e)
+                raise
         try:
             servable = ServableLayer.open(
                 info["files"], block_rows=info["block_rows"], stats=stats
             )
-            if cache is None and cache_bytes:
+            use_fast = fast_path
+            if use_fast == "auto":
+                use_fast = (
+                    cache is None
+                    and cache_bytes is not None
+                    and servable.data_nbytes <= int(cache_bytes)
+                )
+            use_fast = bool(use_fast)
+            if use_fast:
+                cache = None
+            elif cache is None and cache_bytes:
                 cache = ShardedPageCache(
                     servable.num_blocks, cache_bytes, num_shards=num_shards,
-                    tracer=self.tracer,
+                    tracer=self.tracer, metrics=metrics,
                 )
+            elif cache is not None and metrics is not None:
+                cache.bind_metrics(metrics)
             r = SessionReader(
                 self, layer, e, servable, cache=cache, stats=stats,
                 tracer=self.tracer,
@@ -777,13 +897,16 @@ class AtlasSession:
                 # through the permutation sidecars (both None otherwise)
                 id_map=self.store.new_of_old(),
                 id_unmap=self.store.old_of_new(),
+                lease=lease,
+                fast_path=use_fast,
             )
         except BaseException:
+            lease.release()
             self._release(layer, e)
             raise
         with self._lock:
             if not self._session_closed:
-                self._readers.append(r)
+                self._readers.append(weakref.ref(r))
                 return r
         # close() ran while this reader was being opened: it must not
         # escape the session's cleanup — unpin, re-collect (close()'s GC
@@ -800,10 +923,14 @@ class AtlasSession:
                 self._pins[key] = n
             else:
                 self._pins.pop(key, None)
-            self._readers = [r for r in self._readers if not r._closed]
+            self._readers = [
+                ref for ref in self._readers
+                if ref() is not None and not ref()._closed
+            ]
 
     def pinned_versions(self, layer: int) -> dict[int, int]:
         """Epoch -> open-reader count for one layer (diagnostics/tests)."""
+        self._drain_finalized()
         with self._lock:
             return {
                 e: n for (l, e), n in self._pins.items() if l == int(layer)

@@ -34,6 +34,7 @@ import json
 import os
 import re
 import shutil
+import threading
 import warnings
 from typing import Iterable, Iterator
 
@@ -65,6 +66,11 @@ class GraphStore:
         self.root = root
         self.manifest_path = os.path.join(root, "manifest.json")
         self.manifest: dict = {}
+        # serializes manifest mutate-and-write sections against
+        # reload_manifest: a reload that swaps `self.manifest` mid-commit
+        # would strand the commit's mutations on the orphaned dict and
+        # regress next_epoch (epoch reuse under live readers)
+        self._manifest_mutex = threading.Lock()
         self._csr: CSRGraph | None = None
         self._old_of_new: np.ndarray | None = None  # lazy sidecar mmaps
         self._new_of_old: np.ndarray | None = None
@@ -237,6 +243,25 @@ class GraphStore:
         with open(store.manifest_path) as f:
             store.manifest = json.load(f)
         return store
+
+    def reload_manifest(self) -> None:
+        """Re-read the manifest from disk, picking up versions published
+        (or GC'd) by *other processes* sharing this store.  Every
+        manifest mutation is written through ``_write_manifest`` before
+        its caller returns, so disk is always at least as new as this
+        process's memory — reloading can only move forward.  Topology
+        and permutation sidecars are immutable; their caches survive.
+
+        Serialized against in-process manifest writers by the manifest
+        mutex: replacing ``self.manifest`` in the middle of a publish
+        commit would strand the commit's version entry on the orphaned
+        dict (and regress ``next_epoch`` into epoch reuse)."""
+        with self._manifest_mutex:
+            try:
+                with open(self.manifest_path) as f:
+                    self.manifest = json.load(f)
+            except FileNotFoundError:
+                pass  # store being created concurrently: keep what we have
 
     # ------------------------------------------------------------ access
     @property
@@ -463,16 +488,23 @@ class GraphStore:
         if published_at is not None:
             info["published_at"] = float(published_at)
         # the entry is only created/mutated after every fallible step above
-        # succeeded, so a failed commit never leaves a phantom entry
-        entry = self._servable_entry(layer, create=True)
-        # version entry first, current pointer second: a concurrent reader
-        # that observes the new current always finds its version recorded
-        entry["versions"][str(int(epoch))] = info
-        entry["current"] = int(epoch)
-        entry["next_epoch"] = max(int(entry.get("next_epoch") or 1), int(epoch) + 1)
-        for k in ("files", "block_rows", "num_rows", "dim", "dtype"):
-            entry[k] = info[k]  # flat mirror for pre-versioning readers
-        self._write_manifest(scheduler=scheduler)
+        # succeeded, so a failed commit never leaves a phantom entry; the
+        # manifest mutex keeps a concurrent reload_manifest from swapping
+        # self.manifest between the entry fetch and the write (which would
+        # drop this version from the saved manifest and reuse its epoch)
+        with self._manifest_mutex:
+            entry = self._servable_entry(layer, create=True)
+            # version entry first, current pointer second: a concurrent
+            # reader that observes the new current always finds its
+            # version recorded
+            entry["versions"][str(int(epoch))] = info
+            entry["current"] = int(epoch)
+            entry["next_epoch"] = max(
+                int(entry.get("next_epoch") or 1), int(epoch) + 1
+            )
+            for k in ("files", "block_rows", "num_rows", "dim", "dtype"):
+                entry[k] = info[k]  # flat mirror for pre-versioning readers
+            self._write_manifest(scheduler=scheduler)
         self._sweep_orphan_versions(layer, entry)
         return info
 
@@ -634,17 +666,18 @@ class GraphStore:
         file removal to the caller via ``delete_servable_files`` — used by
         ``AtlasSession.gc`` to keep slow disk deletion out of its pin
         lock."""
-        entry = self._servable_entry(layer)
         epoch = int(epoch)
-        if entry.get("current") == epoch:
-            raise ValueError(
-                f"layer {layer}: refusing to drop the current servable "
-                f"version {epoch}; publish a newer one first"
-            )
-        info = entry["versions"].pop(str(epoch), None)
-        if info is None:
-            raise KeyError(f"layer {layer} has no servable version {epoch}")
-        self._write_manifest()
+        with self._manifest_mutex:
+            entry = self._servable_entry(layer)
+            if entry.get("current") == epoch:
+                raise ValueError(
+                    f"layer {layer}: refusing to drop the current servable "
+                    f"version {epoch}; publish a newer one first"
+                )
+            info = entry["versions"].pop(str(epoch), None)
+            if info is None:
+                raise KeyError(f"layer {layer} has no servable version {epoch}")
+            self._write_manifest()
         if delete_files:
             self.delete_servable_files(layer, info)
         return info
